@@ -1,0 +1,66 @@
+"""Paper §4.3.1: mergesort with sorting-network instructions.
+
+Paper result: 12.1× over qsort() on the softcore (64 MiB input).
+Here: sortnet-mergesort (c2_sort + c1_merge, ref path = what XLA fuses)
+vs (a) XLA's library sort (the 'qsort of the platform') and (b) a serial
+insertion-ish baseline. Plus the §6 accounting: instructions per
+sorted-8 and CAS layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.sortnet import n_cas_layers
+
+from .common import row, time_fn
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n = 1 << 16
+    rows = 16                                    # 16 × 64k keys
+    x = jnp.asarray(rng.integers(-2**31, 2**31 - 1, (rows, n)), jnp.int32)
+
+    net = jax.jit(lambda v: ops.sortnet_mergesort(v, max_kernel_width=4096))
+    lib = jax.jit(lambda v: jnp.sort(v, axis=-1))
+
+    t_net = time_fn(net, x)
+    t_lib = time_fn(lib, x)
+    keys_s = rows * n / t_net
+    row("sort_sortnet_mergesort", t_net * 1e6,
+        f"{keys_s/1e6:.1f}Mkeys/s")
+    row("sort_xla_library", t_lib * 1e6,
+        f"{rows*n/t_lib/1e6:.1f}Mkeys/s")
+
+    # serial baseline (softcore qsort analogue): scalar selection over 4k
+    m = 1 << 12
+    y = x[0, :m]
+
+    @jax.jit
+    def serial_min_extract(v):
+        def step(i, carry):
+            arr, out = carry
+            j = jnp.argmin(arr)
+            out = out.at[i].set(arr[j])
+            arr = arr.at[j].set(2**31 - 1)
+            return arr, out
+        _, out = jax.lax.fori_loop(0, m, step,
+                                   (v, jnp.zeros(m, v.dtype)))
+        return out
+    t_serial = time_fn(serial_min_extract, y, warmup=1, iters=3)
+    row("sort_serial_baseline", t_serial * 1e6,
+        f"{m/t_serial/1e6:.3f}Mkeys/s")
+    row("sort_speedup_vs_serial", 0.0,
+        f"{(m/t_serial)and(keys_s/(m/t_serial)):.1f}x(paper:12.1x_vs_qsort)")
+
+    # §6 accounting: one c2_sort sorts 8 keys in 6 CAS layers / 3 cycles;
+    # the fixed-ISA sequence in the paper needed 13 instructions for 4 keys.
+    row("sort_c2_cas_layers_w8", 0.0, f"{n_cas_layers(8)}layers_1instr"
+        "(paper:13_instr_for_4keys_on_SSE)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Output: ``name,us_per_call,derived`` CSV rows.
+Roofline numbers (EXPERIMENTS.md §Roofline) come from launch/dryrun.py,
+which needs its own 512-device process — not run from here.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None)
+    args = p.parse_args()
+
+    from . import (bench_blocksweep, bench_core_overhead, bench_opcount,
+                   bench_prefix, bench_sort, bench_stream)
+    suites = {
+        "fig3_blocksweep": bench_blocksweep.main,
+        "fig4_stream": bench_stream.main,
+        "table2_core_overhead": bench_core_overhead.main,
+        "sec431_sort": bench_sort.main,
+        "sec432_prefix": bench_prefix.main,
+        "sec6_opcount": bench_opcount.main,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

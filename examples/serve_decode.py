@@ -1,0 +1,19 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch hymba-1.5b
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="hymba-1.5b")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--gen", type=int, default=32)
+    args = p.parse_args()
+    serve.main(["--arch", args.arch, "--reduced",
+                "--batch", str(args.batch), "--prompt-len", "64",
+                "--gen", str(args.gen), "--temperature", "0.8"])

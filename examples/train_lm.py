@@ -1,0 +1,40 @@
+"""End-to-end driver: train a ~40M-param llama-family model on synthetic
+data for a few hundred steps, with checkpointing (CPU-runnable).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--tiny]
+
+On a real pod, drop --tiny/--steps and pass --arch llama3-8b etc. —
+identical code path (repro.launch.train).
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--tiny", action="store_true",
+                   help="2-layer smoke config instead of ~40M")
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = p.parse_args()
+
+    if args.tiny:
+        train.main(["--arch", "llama3-8b", "--reduced",
+                    "--steps", str(args.steps), "--batch", "8",
+                    "--seq", "128", "--ckpt-dir", args.ckpt_dir])
+    else:
+        # ~40M params: exercised through the same full-model code path
+        import dataclasses
+        from repro.configs import llama3_8b
+        from unittest import mock
+        cfg = dataclasses.replace(
+            llama3_8b.config(), n_layers=8, d_model=512, n_heads=8,
+            n_kv_heads=4, head_dim=64, d_ff=2048, vocab=8192,
+            param_dtype="float32", act_dtype="float32", attn_chunk=128)
+        with mock.patch("repro.configs.get_config", lambda name: cfg):
+            train.main(["--arch", "llama3-8b",
+                        "--steps", str(args.steps), "--batch", "4",
+                        "--seq", "256", "--ckpt-dir", args.ckpt_dir,
+                        "--log-every", "10"])

@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb runner: one (arch × shape), a list of tagged config
+overrides; records the three roofline terms per variant.
+
+    PYTHONPATH=src python experiments/hillclimb.py llama3-8b train_4k \
+        baseline= nofsdp=fsdp:false ...
+
+Each variant is  tag=key:val,key:val  (empty = baseline).
+Results appended to experiments/perf/<arch>_<shape>.md.
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+
+def parse_variant(spec: str):
+    tag, _, kvs = spec.partition("=")
+    overrides = {}
+    if kvs:
+        for kv in kvs.split(","):
+            k, _, v = kv.partition(":")
+            try:
+                v = json.loads(v)
+            except json.JSONDecodeError:
+                pass
+            overrides[k] = v
+    return tag, overrides
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variants = [parse_variant(s) for s in sys.argv[3:]]
+    from repro.launch.dryrun import run_cell
+
+    os.makedirs("experiments/perf", exist_ok=True)
+    path = f"experiments/perf/{arch}_{shape}.md"
+    rows = []
+    for tag, ov in variants:
+        try:
+            rep = run_cell(arch, shape, False,
+                           outdir=f"experiments/perf/{arch}_{shape}_cells",
+                           overrides=ov, verbose=True)
+            t = rep.terms
+            rows.append(
+                f"| {tag} | `{json.dumps(ov)}` | {t['compute_s']*1e3:.1f} | "
+                f"{t['memory_s']*1e3:.1f} | {t['collective_s']*1e3:.1f} | "
+                f"{t['dominant'].replace('_s','')} | "
+                f"{t['step_time_lower_bound_s']*1e3:.1f} | "
+                f"{t['roofline_fraction']*100:.1f}% | "
+                f"{rep.memory['peak_gib']:.1f} |")
+        except Exception as e:  # noqa: BLE001
+            rows.append(f"| {tag} | `{json.dumps(ov)}` | FAIL: {e!r} | | | | | | |")
+    hdr = ("| variant | overrides | comp ms | mem ms | coll ms | dom | "
+           "bound ms | roofline | peak GiB |\n|---|---|---:|---:|---:|---|"
+           "---:|---:|---:|\n")
+    with open(path, "a") as f:
+        f.write(hdr + "\n".join(rows) + "\n")
+    print("\n" + hdr + "\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

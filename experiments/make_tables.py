@@ -1,0 +1,53 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+ORDER_ARCH = ["internlm2_20b", "llama3_8b", "granite_20b", "qwen3_14b",
+              "mamba2_1p3b", "internvl2_76b", "kimi_k2_1t",
+              "grok1_314b", "musicgen_medium", "hymba_1p5b"]
+ORDER_SHAPE = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ALIAS = {a: a.replace("_", "-").replace("1p", "1.")
+         .replace("mamba2-1.3b", "mamba2-1.3b") for a in ORDER_ARCH}
+
+
+def load(outdir):
+    cells = {}
+    for f in glob.glob(os.path.join(outdir, "*.json")):
+        d = json.load(open(f))
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def fmt_table(cells, mesh):
+    lines = [
+        "| arch | shape | comp (ms) | mem (ms) | coll (ms) | dominant | "
+        "bound (ms) | roofline | useful | peak GiB | fits |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|---:|---|",
+    ]
+    for a_key in ORDER_ARCH:
+        for s in ORDER_SHAPE:
+            d = cells.get((a_key, s, mesh))
+            if d is None:
+                continue
+            t = d["terms"]
+            m = d["memory"]
+            lines.append(
+                f"| {ALIAS[a_key]} | {s} | {t['compute_s']*1e3:.1f} | "
+                f"{t['memory_s']*1e3:.1f} | {t['collective_s']*1e3:.1f} | "
+                f"{t['dominant'].replace('_s','')} | "
+                f"{t['step_time_lower_bound_s']*1e3:.1f} | "
+                f"{t['roofline_fraction']*100:.1f}% | "
+                f"{d['useful_ratio']:.2f} | {m['peak_gib']:.1f} | "
+                f"{'yes' if m['fits_v5e'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    cells = load(outdir)
+    meshes = sorted({m for (_, _, m) in cells})
+    for mesh in meshes:
+        print(f"\n### mesh {mesh}\n")
+        print(fmt_table(cells, mesh))

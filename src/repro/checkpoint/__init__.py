@@ -1,0 +1,2 @@
+from .ckpt import (CheckpointManager, load_checkpoint, restore_sharded,
+                   save_checkpoint)

@@ -1,0 +1,160 @@
+"""Sharding-agnostic, elastic checkpointing (fault tolerance substrate).
+
+Checkpoints store *logical* (unsharded) arrays — one .npy per leaf plus a
+JSON manifest — so a run can restart on ANY mesh whose axes divide the
+dims (elastic re-mesh after pod loss: 512→256 chips restores fine; tested
+in tests/dist). Writes are atomic (tmp dir + rename), happen on process 0
+only, and can run asynchronously off the critical path; a preemption
+signal handler forces a synchronous save (straggler/failure story in
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import tempfile
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[dict] = None,
+                    keep: int = 3) -> str:
+    """Write step checkpoint; returns final path. Call on every process —
+    only process 0 writes."""
+    tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    if jax.process_index() != 0:
+        return os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(directory, exist_ok=True)
+    names, leaves, _ = _flatten_with_names(tree)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_")
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        fn = f"leaf_{i:05d}.npy"
+        true_dtype = str(leaf.dtype)
+        if leaf.dtype.kind == "V" or "bfloat16" in true_dtype:
+            # numpy can't round-trip ml_dtypes — save the raw bits
+            leaf = leaf.view(np.uint16 if leaf.dtype.itemsize == 2
+                             else np.uint8)
+        np.save(os.path.join(tmp, fn), leaf)
+        manifest["leaves"].append(
+            {"name": name, "file": fn, "shape": list(leaf.shape),
+             "dtype": true_dtype})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def load_checkpoint(directory: str, step: Optional[int] = None,
+                    template=None):
+    """Load raw numpy leaves; if `template` (a pytree) is given, unflatten
+    into its structure (order = tree_flatten order)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    import ml_dtypes  # shipped with jax
+
+    def _load(e):
+        a = np.load(os.path.join(path, e["file"]))
+        want = e["dtype"]
+        if str(a.dtype) != want:     # bit-preserved ml_dtypes leaf
+            a = a.view(np.dtype(getattr(ml_dtypes, want)))
+        return a
+
+    leaves = [_load(e) for e in manifest["leaves"]]
+    if template is not None:
+        treedef = jax.tree.structure(template)
+        leaves = treedef.unflatten(leaves)
+    return leaves, manifest
+
+
+def restore_sharded(directory: str, template, shardings, step=None):
+    """Elastic restore: place each logical array onto the CURRENT mesh via
+    the given shardings (any divisor mesh works)."""
+    tree, manifest = load_checkpoint(directory, step, template)
+    placed = jax.tree.map(
+        lambda x, s, t: jax.device_put(x.astype(t.dtype), s),
+        tree, shardings, template)
+    return placed, manifest
+
+
+class CheckpointManager:
+    """Async writer + preemption hook.
+
+    save() snapshots to host then writes in a background thread;
+    install_preemption_handler() registers SIGTERM → synchronous save of
+    the most recent state handed to observe().
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._last: Optional[tuple] = None
+        self._lock = threading.Lock()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree, extra: Optional[dict] = None):
+        # snapshot synchronously (cheap device_get), write in background
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self.wait()
+
+        def _write():
+            save_checkpoint(self.directory, step, host_tree, extra,
+                            self.keep)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def observe(self, step: int, tree, extra: Optional[dict] = None):
+        with self._lock:
+            self._last = (step, tree, extra)
+
+    def install_preemption_handler(self, signals=(signal.SIGTERM,)):
+        def handler(signum, frame):
+            with self._lock:
+                if self._last is not None:
+                    step, tree, extra = self._last
+                    self.wait()
+                    save_checkpoint(self.directory, step, tree, extra,
+                                    self.keep)
+        for s in signals:
+            signal.signal(s, handler)

@@ -1,0 +1,16 @@
+# The paper's primary contribution, adapted to TPU/JAX:
+#   isa         — I'/S' instruction types, registry, ref/kernel dispatch
+#   template    — Pallas instruction templates (paper Alg. 1)
+#   stream      — VLEN / DMA-block geometry (paper cache hierarchy, §3.1)
+#   burst_model — B_eff(block) law behind Fig. 3
+from . import isa
+from .burst_model import PAPER_AXI, TPU_V5E_HBM, TPU_V5E_ICI, BurstModel
+from .isa import Instruction, OperandSpec, Registry
+from .stream import LANES, SUBLANES, VMEM_BYTES, StreamConfig, pad_vocab, round_up
+from .template import KernelTemplate
+
+__all__ = [
+    "isa", "Instruction", "OperandSpec", "Registry", "KernelTemplate",
+    "StreamConfig", "BurstModel", "PAPER_AXI", "TPU_V5E_HBM", "TPU_V5E_ICI",
+    "LANES", "SUBLANES", "VMEM_BYTES", "pad_vocab", "round_up",
+]

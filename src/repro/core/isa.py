@@ -1,0 +1,223 @@
+"""The reconfigurable-SIMD "ISA" — paper §2 mapped onto JAX/Pallas.
+
+The paper adds two instruction *types* to RV32IM:
+
+  I'-type:  rd, rs1  +  vrs1, vrs2 (vector sources), vrd1, vrd2 (vector
+            destinations) — up to 6 operands in one instruction.
+  S'-type:  rd, rs1, rs2 (two scalar sources, e.g. base+index for vector
+            load/store) + vrs1 / vrd1 and a small immediate.
+
+and vector register v0 is hard-wired to 0 so unused operand slots alias
+to it (optional operands).
+
+Here an :class:`Instruction` is the software form of one reconfigurable
+region: a named primitive with
+
+  * an operand signature checked against the I'/S' limits (what keeps the
+    unit's interface — and on TPU its VMEM operand footprint — small),
+  * ``ref``      — the pure-jnp oracle ("the base RV32IM core runs it in
+                   software"),
+  * ``kernel``   — the Pallas implementation ("the FPGA region"), accepting
+                   ``interpret=`` for CPU validation,
+  * ``pipeline_depth`` — the paper's ``c1_cycles`` metadata: grid steps of
+                   latency before the first result block is available.
+
+The registry's dispatch mode reproduces the paper's evaluation method:
+``ref`` is the softcore *without* the SIMD unit, ``kernel`` is with it.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+from .stream import StreamConfig
+
+# Operand ceilings from the encodings in Fig. 1 of the paper.
+ITYPE_LIMITS = {
+    # itype: (scalar_in, scalar_out, vector_in, vector_out, total)
+    "I'": (1, 1, 2, 2, 6),
+    "S'": (2, 1, 1, 1, 5),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSpec:
+    """Operand signature of one instruction (paper Fig. 1)."""
+
+    itype: str = "I'"
+    scalar_in: int = 0
+    scalar_out: int = 0
+    vector_in: int = 1
+    vector_out: int = 1
+
+    def __post_init__(self):
+        if self.itype not in ITYPE_LIMITS:
+            raise ValueError(f"unknown instruction type {self.itype!r}; "
+                             f"have {sorted(ITYPE_LIMITS)}")
+        si, so, vi, vo, tot = ITYPE_LIMITS[self.itype]
+        if self.scalar_in > si or self.scalar_out > so:
+            raise ValueError(f"{self.itype}: at most {si} scalar sources / "
+                             f"{so} scalar destinations")
+        if self.vector_in > vi or self.vector_out > vo:
+            raise ValueError(f"{self.itype}: at most {vi} vector sources / "
+                             f"{vo} vector destinations")
+        if self.n_operands > tot:
+            raise ValueError(f"{self.itype}: {self.n_operands} operands "
+                             f"exceed the {tot}-operand encoding budget")
+        if min(self.scalar_in, self.scalar_out,
+               self.vector_in, self.vector_out) < 0:
+            raise ValueError("operand counts must be non-negative")
+
+    @property
+    def n_operands(self) -> int:
+        return (self.scalar_in + self.scalar_out
+                + self.vector_in + self.vector_out)
+
+    @property
+    def n_inputs(self) -> int:
+        return self.scalar_in + self.vector_in
+
+    @property
+    def n_outputs(self) -> int:
+        return self.scalar_out + self.vector_out
+
+
+@dataclasses.dataclass
+class Instruction:
+    """One reconfigurable SIMD instruction (template instance, paper §2.2)."""
+
+    name: str
+    spec: OperandSpec
+    ref: Callable[..., Any]
+    kernel: Optional[Callable[..., Any]] = None
+    pipeline_depth: int = 1          # paper's c*_cycles
+    stream: StreamConfig = dataclasses.field(default_factory=StreamConfig)
+    doc: str = ""
+
+    def __post_init__(self):
+        if not callable(self.ref):
+            raise TypeError(f"{self.name}: ref must be callable")
+
+    def __call__(self, *operands, mode: Optional[str] = None, **kw):
+        return _REGISTRY.dispatch(self.name, *operands, mode=mode, **kw)
+
+
+class Registry:
+    """Instruction registry + dispatch ("binutils patch + decoder")."""
+
+    MODES = ("ref", "kernel", "interpret", "auto")
+
+    def __init__(self):
+        self._instrs: dict[str, Instruction] = {}
+        self._tls = threading.local()
+
+    # -- registration --------------------------------------------------------
+    def register(self, instr: Instruction, *, overwrite: bool = False) -> Instruction:
+        if instr.name in self._instrs and not overwrite:
+            raise ValueError(f"instruction {instr.name!r} already registered")
+        self._instrs[instr.name] = instr
+        return instr
+
+    def define(self, name: str, *, itype: str = "I'", scalar_in: int = 0,
+               scalar_out: int = 0, vector_in: int = 1, vector_out: int = 1,
+               pipeline_depth: int = 1, stream: Optional[StreamConfig] = None,
+               doc: str = "", kernel: Optional[Callable] = None,
+               overwrite: bool = False):
+        """Decorator form: ``@isa.define("c2_sort", vector_in=1, ...)``."""
+        spec = OperandSpec(itype=itype, scalar_in=scalar_in,
+                           scalar_out=scalar_out, vector_in=vector_in,
+                           vector_out=vector_out)
+
+        def deco(ref_fn: Callable) -> Instruction:
+            instr = Instruction(
+                name=name, spec=spec, ref=ref_fn, kernel=kernel,
+                pipeline_depth=pipeline_depth,
+                stream=stream or StreamConfig(), doc=doc or ref_fn.__doc__ or "")
+            return self.register(instr, overwrite=overwrite)
+
+        return deco
+
+    def bind_kernel(self, name: str, kernel: Callable) -> None:
+        """Attach/replace the Pallas implementation of an instruction."""
+        self.get(name).kernel = kernel
+
+    # -- lookup ---------------------------------------------------------------
+    def get(self, name: str) -> Instruction:
+        try:
+            return self._instrs[name]
+        except KeyError as e:
+            raise KeyError(
+                f"unknown instruction {name!r}; registered: "
+                f"{sorted(self._instrs)}") from e
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._instrs
+
+    def names(self) -> list[str]:
+        return sorted(self._instrs)
+
+    # -- dispatch -------------------------------------------------------------
+    @property
+    def mode(self) -> str:
+        return getattr(self._tls, "mode", "ref")
+
+    @contextlib.contextmanager
+    def use(self, mode: str):
+        """Select implementation: 'ref' (base core, no SIMD unit),
+        'kernel' (Pallas, TPU), 'interpret' (Pallas simulated on CPU),
+        'auto' (kernel on TPU else ref)."""
+        if mode not in self.MODES:
+            raise ValueError(f"mode must be one of {self.MODES}")
+        prev = self.mode
+        self._tls.mode = mode
+        try:
+            yield self
+        finally:
+            self._tls.mode = prev
+
+    def _resolve(self, instr: Instruction, mode: Optional[str]) -> str:
+        mode = mode or self.mode
+        if mode == "auto":
+            on_tpu = jax.default_backend() == "tpu"
+            mode = "kernel" if (on_tpu and instr.kernel is not None) else "ref"
+        if mode in ("kernel", "interpret") and instr.kernel is None:
+            raise ValueError(f"{instr.name}: no Pallas kernel bound "
+                             f"(ref-only instruction)")
+        return mode
+
+    def dispatch(self, name: str, *operands, mode: Optional[str] = None, **kw):
+        instr = self.get(name)
+        if len(operands) != instr.spec.n_inputs:
+            raise TypeError(
+                f"{name}: expected {instr.spec.n_inputs} input operands "
+                f"({instr.spec.scalar_in} scalar + {instr.spec.vector_in} "
+                f"vector), got {len(operands)}")
+        m = self._resolve(instr, mode)
+        if m == "ref":
+            return instr.ref(*operands, **kw)
+        if m == "interpret":
+            return instr.kernel(*operands, interpret=True, **kw)
+        return instr.kernel(*operands, interpret=False, **kw)
+
+    call = dispatch
+
+
+# The global ISA — the process-wide "decoder table".
+_REGISTRY = Registry()
+
+register = _REGISTRY.register
+define = _REGISTRY.define
+bind_kernel = _REGISTRY.bind_kernel
+get = _REGISTRY.get
+names = _REGISTRY.names
+use = _REGISTRY.use
+call = _REGISTRY.dispatch
+registry = _REGISTRY
+
+
+def current_mode() -> str:
+    return _REGISTRY.mode

@@ -1,0 +1,115 @@
+"""Streaming geometry — the TPU analogue of the paper's cache hierarchy knobs.
+
+The paper (§3.1) tunes three widths:
+  * VLEN            — vector register width (256-bit sweet spot, Fig. 3 right)
+  * DL1 block size  — set equal to VLEN so full-vector stores skip the
+                      fetch-on-write-miss read (§3.1.1)
+  * LLC block size  — very wide (8192–16384 bit) so one block maps to one
+                      long DRAM burst (§3.1.2), stored as sub-blocks that
+                      stream out before the burst completes (§3.1.3)
+
+On TPU the same three degrees of freedom exist with different names:
+  * VLEN            → the lane/sublane tile a kernel touches per step
+                      (last dim multiple of 128 lanes, 2nd-to-last multiple
+                      of 8 sublanes for fp32 / 16 for bf16)
+  * DL1 block       → the Pallas BlockSpec block: full-block writes never
+                      read-modify-write
+  * LLC block/burst → the HBM→VMEM DMA size per grid step; the grid
+                      pipeline overlaps DMA with compute exactly like the
+                      paper's sub-blocked LLC serves DL1 during the burst.
+
+``StreamConfig`` carries those choices and the VMEM budget check that
+replaces the paper's BRAM capacity constraint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# TPU v5e geometry (target hardware; see DESIGN.md §2).
+LANES = 128                 # vector lanes (minor dim granularity)
+SUBLANES = 8                # fp32 sublane granularity; bf16 packs 16
+VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB VMEM per core on v5e
+HBM_BYTES = 16 * 1024 * 1024 * 1024
+
+DTYPE_BITS = {
+    "float32": 32, "bfloat16": 16, "float16": 16,
+    "int32": 32, "int8": 8, "uint8": 8, "int16": 16,
+}
+
+
+def _bits(dtype) -> int:
+    import numpy as _np
+    name = _np.dtype(dtype).name
+    try:
+        return DTYPE_BITS[name]
+    except KeyError as e:
+        raise ValueError(f"unsupported dtype for streaming geometry: {name}") from e
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Block geometry for a streaming instruction (paper Table 1 analogue).
+
+    vlen_bits:   per-step vector width a kernel body sees (paper: VLEN).
+    block_bits:  HBM→VMEM DMA block ("LLC block" / burst length).
+    n_buffers:   pipeline depth of the DMA double-buffering (paper §3.1.4
+                 "double the interconnect rate" → overlap instead).
+    """
+
+    vlen_bits: int = 256 * 128       # 256-bit paper VLEN × 128 lanes
+    block_bits: int = 16384 * 128    # paper's 16384-bit LLC block × lanes
+    n_buffers: int = 2
+
+    def __post_init__(self):
+        if self.vlen_bits % (LANES * 8) != 0:
+            raise ValueError(
+                f"vlen_bits={self.vlen_bits} must be a multiple of "
+                f"{LANES * 8} (byte-aligned across {LANES} lanes)")
+        if self.block_bits % self.vlen_bits != 0:
+            raise ValueError("block_bits must be a multiple of vlen_bits "
+                             "(LLC block holds whole sub-blocks, §3.1.3)")
+
+    # -- derived geometry ---------------------------------------------------
+    def vlen_elems(self, dtype) -> int:
+        return self.vlen_bits // _bits(dtype)
+
+    def block_elems(self, dtype) -> int:
+        return self.block_bits // _bits(dtype)
+
+    def sub_blocks(self) -> int:
+        """Paper §3.1.3: sub-blocks per LLC block."""
+        return self.block_bits // self.vlen_bits
+
+    def block_shape_2d(self, dtype) -> tuple[int, int]:
+        """A (sublane, lane) tile covering one DMA block."""
+        elems = self.block_elems(dtype)
+        rows = max(1, elems // LANES)
+        return (rows, LANES)
+
+    # -- budget check (BRAM capacity analogue) ------------------------------
+    def vmem_footprint_bytes(self, n_operands: int, dtype) -> int:
+        """Bytes of VMEM pinned by one instruction's operand blocks."""
+        return n_operands * self.n_buffers * self.block_bits // 8 * 1
+
+    def check_vmem_budget(self, n_operands: int, dtype,
+                          budget: int = VMEM_BYTES) -> None:
+        fp = self.vmem_footprint_bytes(n_operands, dtype)
+        if fp > budget:
+            raise ValueError(
+                f"instruction operand blocks need {fp} B of VMEM "
+                f"({n_operands} operands × {self.n_buffers} buffers × "
+                f"{self.block_bits // 8} B) > budget {budget} B — shrink "
+                f"block_bits (the paper hit the same wall with BRAM, §3.1.3)")
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def pad_vocab(vocab: int, mult: int = 256) -> int:
+    """Pad embedding-table rows so the vocab dim shards over any axis ≤ mult.
+
+    (50280 → 50432, 32001 → 32256; logits over padding are masked.)
+    """
+    return round_up(vocab, mult)

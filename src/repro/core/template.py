@@ -1,0 +1,157 @@
+"""Instruction templates — paper §2.2 ("Algorithm 1") in Pallas form.
+
+The paper gives a Verilog placeholder module: the framework provides the
+operand plumbing (register names delayed by ``c1_cycles``, valid bits,
+back-to-back pipelining) and the user writes only the datapath between
+``in_vdata*`` and ``out_vdata*``.
+
+:class:`KernelTemplate` is the same contract for TPU: the user supplies a
+*block body* — a function of VMEM Refs — and the template generates the
+``pl.pallas_call`` with grid, BlockSpecs, scalar(SMEM) operands and an
+optional carried state that persists across sequential grid steps (the
+paper's "stateful instruction" discussion in §6: our carry lives in VMEM
+scratch, re-initialised at grid step 0, exactly the softcore's
+internal-state registers).
+
+Template guarantees, mirroring the paper's:
+  * back-to-back calls pipeline: the grid's minor dimension streams blocks
+    while the next HBM→VMEM DMA ("burst", §3.1.2-3) is in flight;
+  * full-block outputs never read-modify-write (§3.1.1 write-allocate
+    elision);
+  * the operand count is bounded by the I'/S' encoding (checked by
+    :class:`repro.core.isa.OperandSpec` at registration).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .stream import LANES, StreamConfig
+
+
+@dataclasses.dataclass
+class KernelTemplate:
+    """Generate a pallas_call for a streaming / carried SIMD instruction.
+
+    body signature:
+        body(scalar_refs, in_refs, out_refs, carry_ref, step)
+    where ``scalar_refs`` is a (possibly empty) tuple of SMEM refs,
+    ``in_refs``/``out_refs`` are VMEM block refs, ``carry_ref`` is a VMEM
+    scratch ref or None, and ``step`` is the sequential grid index
+    (paper: the instruction-call counter).
+
+    Vector operands are 2D ``(rows, cols)``; the grid tiles rows in
+    parallel and cols sequentially (so a carry along cols is legal).
+    """
+
+    name: str
+    body: Callable[..., None]
+    n_scalar_in: int = 0
+    n_vec_in: int = 1
+    n_vec_out: int = 1
+    block_rows: int = 8
+    block_cols: int = LANES
+    # carry: per-row-block state, shape (block_rows, carry_cols)
+    carry_cols: int = 0
+    carry_dtype: Any = jnp.float32
+    carry_init: float = 0.0
+    # output shapes: fn(*vector_inputs) -> sequence of ShapeDtypeStruct.
+    out_shapes: Optional[Callable[..., Sequence[jax.ShapeDtypeStruct]]] = None
+    cost_flops_per_elem: float = 1.0   # for roofline bookkeeping
+
+    def pipeline_depth(self) -> int:
+        """Grid steps before the first output block lands (c*_cycles analogue)."""
+        return 1 if self.carry_cols == 0 else 2
+
+    # ------------------------------------------------------------------
+    def _wrapped_body(self):
+        tpl = self
+
+        def kernel(*refs):
+            ns, ni, no = tpl.n_scalar_in, tpl.n_vec_in, tpl.n_vec_out
+            scalar_refs = refs[:ns]
+            in_refs = refs[ns:ns + ni]
+            out_refs = refs[ns + ni:ns + ni + no]
+            carry_ref = refs[ns + ni + no] if tpl.carry_cols else None
+            step = pl.program_id(1)
+            if carry_ref is not None:
+                @pl.when(step == 0)
+                def _init():
+                    carry_ref[...] = jnp.full_like(
+                        carry_ref[...], tpl.carry_init)
+            tpl.body(scalar_refs, in_refs, out_refs, carry_ref, step)
+
+        kernel.__name__ = f"{self.name}_kernel"
+        return kernel
+
+    # ------------------------------------------------------------------
+    def __call__(self, *operands, interpret: bool = False):
+        ns, ni, no = self.n_scalar_in, self.n_vec_in, self.n_vec_out
+        if len(operands) != ns + ni:
+            raise TypeError(f"{self.name}: expected {ns} scalar + {ni} vector "
+                            f"operands, got {len(operands)}")
+        scalars = operands[:ns]
+        vectors = operands[ns:]
+        for v in vectors:
+            if v.ndim != 2:
+                raise ValueError(f"{self.name}: vector operands must be 2D "
+                                 f"(rows, cols); got shape {v.shape}")
+        rows, cols = vectors[0].shape
+        if rows % self.block_rows or cols % self.block_cols:
+            raise ValueError(
+                f"{self.name}: operand shape {(rows, cols)} not divisible by "
+                f"block ({self.block_rows}, {self.block_cols}); pad upstream")
+        grid = (rows // self.block_rows, cols // self.block_cols)
+
+        if self.out_shapes is not None:
+            out_shape = tuple(self.out_shapes(*vectors))
+        else:
+            out_shape = tuple(
+                jax.ShapeDtypeStruct(vectors[0].shape, vectors[0].dtype)
+                for _ in range(no))
+
+        blockspec = pl.BlockSpec((self.block_rows, self.block_cols),
+                                 lambda r, c: (r, c))
+        in_specs = ([pl.BlockSpec(memory_space=pltpu.SMEM)] * ns
+                    + [blockspec] * ni)
+        out_specs = tuple(
+            pl.BlockSpec(
+                (self.block_rows,
+                 self.block_cols * s.shape[1] // cols if cols else self.block_cols),
+                lambda r, c: (r, c))
+            for s in out_shape)
+        scratch = ([pltpu.VMEM((self.block_rows, self.carry_cols),
+                               self.carry_dtype)]
+                   if self.carry_cols else [])
+
+        fn = pl.pallas_call(
+            self._wrapped_body(),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs if len(out_shape) > 1 else out_specs[0],
+            out_shape=out_shape if len(out_shape) > 1 else out_shape[0],
+            scratch_shapes=scratch,
+            interpret=interpret,
+            # rows are independent ("parallel"); cols carry state in order.
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary"),
+            ) if not interpret else None,
+        )
+        scalars = tuple(jnp.asarray(s).reshape(-1) for s in scalars)
+        out = fn(*scalars, *vectors)
+        return out
+
+    # ------------------------------------------------------------------
+    def reference(self, ref_fn: Callable) -> Callable:
+        """Tag a pure-jnp oracle with the same calling convention."""
+        @functools.wraps(ref_fn)
+        def wrapped(*operands, interpret: bool = False):  # interpret ignored
+            del interpret
+            return ref_fn(*operands)
+        return wrapped

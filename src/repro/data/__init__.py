@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMData, TokenFileData, make_global_batch

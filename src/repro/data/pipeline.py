@@ -1,0 +1,83 @@
+"""Deterministic, resumable, host-sharded data pipeline.
+
+Production properties needed at 1000+ nodes:
+  * stateless addressing — batch(step) is a pure function of (seed, step),
+    so restart-from-checkpoint resumes the stream exactly (the cursor IS
+    the step; no iterator state to snapshot);
+  * host sharding — each host materialises only its slice of the global
+    batch, assembled into a global array via the mesh sharding;
+  * straggler-free — no cross-host coordination in the data path.
+
+SyntheticLMData generates a Zipf-ish Markov token stream with enough
+structure for loss-goes-down smoke training; TokenFileData memory-maps a
+flat token file (the real-corpus path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLMData:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def _host_slice(self) -> tuple[int, int]:
+        n, i = jax.process_count(), jax.process_index()
+        per = self.global_batch // n
+        return i * per, per
+
+    def host_batch(self, step: int) -> dict[str, np.ndarray]:
+        """This host's rows of the global batch for `step` (numpy)."""
+        start, rows = self._host_slice()
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, start]))
+        # Zipf marginals + a short-range repeat structure (learnable)
+        z = rng.zipf(1.3, size=(rows, self.seq_len + 1)) % self.vocab
+        rep = rng.integers(0, self.vocab, (rows, 1))
+        mask = rng.random((rows, self.seq_len + 1)) < 0.15
+        toks = np.where(mask, rep, z).astype(np.int32)
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+@dataclasses.dataclass
+class TokenFileData:
+    """Flat binary int32 token file, deterministic strided addressing."""
+    path: str
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self._tokens = np.memmap(self.path, dtype=np.int32, mode="r")
+        self._n_windows = (len(self._tokens) - 1) // self.seq_len
+
+    def host_batch(self, step: int) -> dict[str, np.ndarray]:
+        n, i = jax.process_count(), jax.process_index()
+        per = self.global_batch // n
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        idx = rng.integers(0, self._n_windows, (self.global_batch,))
+        idx = idx[i * per:(i + 1) * per]
+        rows = np.stack([
+            self._tokens[j * self.seq_len:(j + 1) * self.seq_len + 1]
+            for j in idx])
+        return {"tokens": rows[:, :-1].astype(np.int32),
+                "targets": rows[:, 1:].astype(np.int32)}
+
+
+def make_global_batch(host_batch: dict, shardings: dict):
+    """Assemble per-host numpy slices into global sharded jax.Arrays."""
+    def place(x, s):
+        if jax.process_count() == 1:
+            return jax.device_put(x, s)
+        globalshape = (x.shape[0] * jax.process_count(),) + x.shape[1:]
+        return jax.make_array_from_process_local_data(s, x, globalshape)
+    return jax.tree.map(place, host_batch, shardings)

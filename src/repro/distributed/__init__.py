@@ -1,0 +1,4 @@
+# Distribution substrate: logical-axis sharding rules with divisibility-aware
+# fallback, compressed cross-pod collectives, and GPipe pipeline stages.
+from .sharding import (DEFAULT_RULES, logical_sharding, logical_spec,
+                       shard_fit, tree_shardings)

@@ -1,0 +1,68 @@
+"""GPipe-style pipeline parallelism over a mesh axis.
+
+The production meshes keep the `pod` axis as pure DP (per the dry-run
+spec), but at 1000+ nodes pipeline stages over the slow axis are the
+standard alternative when per-pod memory is the binding constraint
+(kimi-k2 training, EXPERIMENTS.md). This module implements the SPMD
+GPipe schedule with `ppermute` microbatch handoff so the option exists
+as a first-class, tested feature.
+
+Schedule: S stages (one per device along `axis_name`), M microbatches,
+T = M + S - 1 ticks. At tick t, stage s runs microbatch (t - s) if it is
+in range; activations hop right one stage per tick. SPMD means inactive
+(bubble) ticks still execute the stage body on zeros — the usual cost of
+collective-based pipelining (bubble fraction (S-1)/T).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def gpipe_forward(stage_fn: Callable, local_params, microbatches: jax.Array,
+                  axis_name: str, n_stages: int) -> jax.Array:
+    """Run microbatches through the pipeline; returns stacked outputs.
+
+    stage_fn(local_params, x_mb) -> y_mb, applied by every stage (the
+    caller passes stage-specific params via shard_map sharding).
+    microbatches: (M, ...) — identical on every stage (stage 0 consumes).
+    Output is valid on the LAST stage (zeros elsewhere); callers psum or
+    read from stage S-1.
+    """
+    s = lax.axis_index(axis_name)
+    m = microbatches.shape[0]
+    ticks = m + n_stages - 1
+    right = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def mb_at(i):
+        return lax.dynamic_index_in_dim(
+            microbatches, jnp.clip(i, 0, m - 1), 0, keepdims=False)
+
+    def tick(t, carry):
+        buf_in, outs = carry
+        mb_idx = t - s
+        active = (mb_idx >= 0) & (mb_idx < m)
+        x = jnp.where(s == 0, mb_at(t), buf_in)
+        y = stage_fn(local_params, x)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        # last stage banks its finished microbatch
+        outs = lax.cond(
+            active & (s == n_stages - 1),
+            lambda o: lax.dynamic_update_index_in_dim(
+                o, y, jnp.clip(mb_idx, 0, m - 1), 0),
+            lambda o: o, outs)
+        buf_next = lax.ppermute(y, axis_name, right)
+        return buf_next, outs
+
+    buf0 = jnp.zeros_like(stage_fn(local_params, mb_at(0)))
+    outs0 = jnp.zeros((m,) + buf0.shape, buf0.dtype)
+    _, outs = lax.fori_loop(0, ticks, tick, (buf0, outs0))
+    return outs
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe bubble overhead — the napkin number used in §Perf."""
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

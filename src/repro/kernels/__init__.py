@@ -1,0 +1,8 @@
+# Custom SIMD instructions (paper §2.2, §4.3) for the TPU target:
+#   sortnet     — c2_sort / c1_merge bitonic networks
+#   prefix_scan — c3_prefixsum / c4_chunkscan carried scans
+#   stream_copy — c0 streaming family (memcpy / STREAM)
+#   topk        — c5_topk key/payload network (MoE router)
+#   flashattn   — c6_flashattn fused attention
+# ops.py registers everything in the ISA; ref.py holds the jnp oracles.
+from . import ops, ref  # noqa: F401  (importing ops registers the ISA)

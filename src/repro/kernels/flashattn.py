@@ -1,0 +1,100 @@
+"""c6_flashattn — fused blockwise attention as one "instruction".
+
+Beyond-paper but paper-idiomatic (DESIGN.md §3): flash attention is a
+carried-state streaming primitive — running max m and normaliser l play
+the role of c3_prefixsum's carried batch total, K/V blocks stream through
+the sequential grid dimension while the accumulator stays resident in
+VMEM. One fused kernel replaces the XLA einsum→mask→softmax→einsum HLO
+sequence (the "instruction count reduction" the paper measures in §6).
+
+Layout: q,k,v (BH, S, D); grid (BH, q_blocks, kv_blocks), kv innermost
+(sequential, carries m/l/acc); q blocks parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_body(scale: float, causal: bool, block_q: int, block_k: int,
+               q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)            # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q,k,v: (bh, seq, d). GQA: repeat kv heads before calling."""
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    if causal and sq != sk:
+        raise ValueError("causal kernel assumes sq == sk (prefill)")
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"seq ({sq},{sk}) % blocks ({block_q},{block_k}) != 0")
+    if scale is None:
+        scale = d ** -0.5
+    grid = (bh, sq // block_q, sk // block_k)
+    return pl.pallas_call(
+        functools.partial(_attn_body, scale, causal, block_q, block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # normaliser l
+            pltpu.VMEM((block_q, d), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

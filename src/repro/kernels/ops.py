@@ -1,0 +1,355 @@
+"""Public ops: every custom SIMD instruction, registered in the ISA.
+
+This is the "binutils patch": each op below registers one Instruction
+with its I'/S'-type operand signature, its pure-jnp oracle (ref.py) and
+its Pallas kernel, then exposes a user-facing wrapper that handles
+shape normalisation and dispatch-mode plumbing.
+
+Dispatch (repro.core.isa.use):
+    'ref'       — base core, no SIMD unit (paper's software baselines)
+    'kernel'    — Pallas on TPU
+    'interpret' — Pallas simulated on CPU (correctness tests)
+    'auto'      — kernel iff running on TPU
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isa
+from repro.core.isa import Instruction, OperandSpec
+from repro.core.stream import StreamConfig
+
+from . import flashattn as _fa
+from . import prefix_scan as _ps
+from . import ref
+from . import sortnet as _sn
+from . import stream_copy as _sc
+from . import topk as _tk
+
+
+def _as_rows(x: jax.Array, cols: int):
+    """Collapse all leading axes; last axis stays the vector axis."""
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    return x.reshape(rows, cols), lead
+
+
+def _pad_rows(x2d: jax.Array, mult: int = 8):
+    r = x2d.shape[0]
+    pad = (-r) % mult
+    if pad:
+        x2d = jnp.concatenate([x2d, jnp.zeros((pad, x2d.shape[1]), x2d.dtype)], 0)
+    return x2d, r
+
+
+# ---------------------------------------------------------------------------
+# c2_sort
+# ---------------------------------------------------------------------------
+
+def _sort_kernel(x, width: int = 8, descending: bool = False, *,
+                 interpret: bool = False):
+    x2d, lead = _as_rows(x, x.shape[-1])
+    x2d, r = _pad_rows(x2d)
+    out = _sn.sort_chunks_pallas(x2d, width=width, descending=descending,
+                                 interpret=interpret)
+    return out[:r].reshape(*lead, x.shape[-1])
+
+
+isa.register(Instruction(
+    name="c2_sort",
+    spec=OperandSpec(itype="I'", vector_in=1, vector_out=1),
+    ref=ref.sort_chunks,
+    kernel=_sort_kernel,
+    pipeline_depth=_sn.n_cas_layers(8) // 2,    # paper: 6 layers / 3 cycles
+    stream=StreamConfig(),
+    doc="bitonic sort of each `width`-chunk of a vector register",
+))
+
+
+def sort_chunks(x, width: int = 8, descending: bool = False, mode=None):
+    return isa.call("c2_sort", x, width=width, descending=descending, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# c1_merge  (2 vector in, 2 vector out — the full I'-type operand budget)
+# ---------------------------------------------------------------------------
+
+def _merge_kernel(a, b, width=None, *, interpret: bool = False):
+    w = width or a.shape[-1]
+    a2, lead = _as_rows(a, a.shape[-1])
+    b2, _ = _as_rows(b, b.shape[-1])
+    a2, r = _pad_rows(a2)
+    b2, _ = _pad_rows(b2)
+    lo, hi = _sn.merge_sorted_pallas(a2, b2, width=w, interpret=interpret)
+    return (lo[:r].reshape(*lead, a.shape[-1]),
+            hi[:r].reshape(*lead, a.shape[-1]))
+
+
+isa.register(Instruction(
+    name="c1_merge",
+    spec=OperandSpec(itype="I'", vector_in=2, vector_out=2),
+    ref=ref.merge_sorted,
+    kernel=_merge_kernel,
+    pipeline_depth=4,
+    doc="merge two sorted registers; lower→vrd1, upper→vrd2",
+))
+
+
+def merge_sorted(a, b, width=None, mode=None):
+    return isa.call("c1_merge", a, b, width=width, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# c3_prefixsum
+# ---------------------------------------------------------------------------
+
+def _prefix_kernel(x, *, interpret: bool = False):
+    x2d, lead = _as_rows(x, x.shape[-1])
+    x2d, r = _pad_rows(x2d)
+    cols = x2d.shape[1]
+    bc = cols
+    for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cols % cand == 0:
+            bc = cand
+            break
+    out = _ps.prefix_sum_pallas(x2d, block_cols=bc, interpret=interpret)
+    return out[:r].reshape(*lead, x.shape[-1])
+
+
+isa.register(Instruction(
+    name="c3_prefixsum",
+    spec=OperandSpec(itype="I'", vector_in=1, vector_out=1),
+    ref=ref.prefix_sum,
+    kernel=_prefix_kernel,
+    pipeline_depth=2,
+    doc="Hillis–Steele scan with carried batch total (arbitrary length)",
+))
+
+
+def prefix_sum(x, mode=None):
+    return isa.call("c3_prefixsum", x, mode=mode)
+
+
+def exclusive_prefix_sum(x, mode=None):
+    inc = prefix_sum(x, mode=mode)
+    return inc - x
+
+
+# ---------------------------------------------------------------------------
+# c4_chunkscan (affine carry — SSD inter-chunk recurrence)
+# ---------------------------------------------------------------------------
+
+def _chunkscan_kernel(a, b, *, interpret: bool = False):
+    a2, lead = _as_rows(a, a.shape[-1])
+    b2, _ = _as_rows(b, b.shape[-1])
+    a2, r = _pad_rows(a2)
+    b2, _ = _pad_rows(b2)
+    cols = a2.shape[1]
+    bc = cols
+    for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cols % cand == 0:
+            bc = cand
+            break
+    out = _ps.chunk_scan_pallas(a2, b2, block_cols=bc, interpret=interpret)
+    return out[:r].reshape(*lead, a.shape[-1])
+
+
+isa.register(Instruction(
+    name="c4_chunkscan",
+    spec=OperandSpec(itype="I'", vector_in=2, vector_out=1),
+    ref=ref.chunk_scan,
+    kernel=_chunkscan_kernel,
+    pipeline_depth=2,
+    doc="carried affine scan y=a·y'+b (Mamba2 SSD state recurrence)",
+))
+
+
+def chunk_scan(a, b, mode=None):
+    return isa.call("c4_chunkscan", a, b, mode=mode)
+
+
+def _chunkscan_state_kernel(a, b, axis: int = 1, *, interpret: bool = False):
+    # kernel path: broadcast decay to state rank, scan along last axis.
+    # (On TPU this runs per-shard under shard_map; the ref path keeps the
+    # broadcast symbolic, which is what the sharded model path uses.)
+    extra = b.ndim - a.ndim
+    ab = jnp.broadcast_to(a.reshape(a.shape + (1,) * extra), b.shape)
+    ab = jnp.moveaxis(ab, axis, -1)
+    bb = jnp.moveaxis(b, axis, -1)
+    out = _chunkscan_kernel(ab.reshape(-1, ab.shape[-1]),
+                            bb.reshape(-1, bb.shape[-1]),
+                            interpret=interpret)
+    return jnp.moveaxis(out.reshape(bb.shape), -1, axis)
+
+
+isa.register(Instruction(
+    name="c4_statescan",
+    spec=OperandSpec(itype="I'", vector_in=2, vector_out=1),
+    ref=ref.chunk_scan_state,
+    kernel=_chunkscan_state_kernel,
+    pipeline_depth=2,
+    doc="c4_chunkscan with shared per-head decay (SSD chunk states)",
+))
+
+
+def chunk_scan_state(a, b, axis: int = 1, mode=None):
+    return isa.call("c4_statescan", a, b, axis=axis, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# c0 streaming family (S'-type)
+# ---------------------------------------------------------------------------
+
+# S'-type: the paper's two scalar sources are the base address + loop index;
+# in a dataflow compiler addressing is the BlockSpec index map, so the
+# dispatch signature carries only the vector operand.
+isa.register(Instruction(
+    name="c0_copy", spec=OperandSpec(itype="S'", scalar_in=0, vector_in=1,
+                                     vector_out=1),
+    ref=ref.stream_copy, kernel=_sc.stream_copy_pallas, pipeline_depth=1,
+    doc="c0_lv + c0_sv: streaming vector move (memcpy building block); "
+        "S'-type rs1/rs2 (base+index) become the BlockSpec index map"))
+
+isa.register(Instruction(
+    name="c0_scale", spec=OperandSpec(itype="I'", scalar_in=1, vector_in=1,
+                                      vector_out=1),
+    ref=ref.stream_scale, kernel=_sc.stream_scale_pallas, pipeline_depth=1,
+    doc="STREAM Scale"))
+
+isa.register(Instruction(
+    name="c0_add", spec=OperandSpec(itype="I'", vector_in=2, vector_out=1),
+    ref=ref.stream_add, kernel=_sc.stream_add_pallas, pipeline_depth=1,
+    doc="STREAM Add"))
+
+isa.register(Instruction(
+    name="c0_triad", spec=OperandSpec(itype="I'", scalar_in=1, vector_in=2,
+                                      vector_out=1),
+    ref=ref.stream_triad, kernel=_sc.stream_triad_pallas, pipeline_depth=1,
+    doc="STREAM Triad"))
+
+
+def stream_copy(x, mode=None):
+    return isa.call("c0_copy", x, mode=mode)
+
+def stream_scale(x, s, mode=None):
+    return isa.call("c0_scale", x, s, mode=mode)
+
+def stream_add(a, b, mode=None):
+    return isa.call("c0_add", a, b, mode=mode)
+
+def stream_triad(a, b, s, mode=None):
+    return isa.call("c0_triad", a, b, s, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# c5_topk
+# ---------------------------------------------------------------------------
+
+def _topk_kernel(x, k: int, *, interpret: bool = False):
+    x2d, lead = _as_rows(x, x.shape[-1])
+    n = x2d.shape[1]
+    npow = 1 << (n - 1).bit_length()
+    if npow != n:
+        fill = jnp.finfo(x.dtype).min if jnp.issubdtype(x.dtype, jnp.floating) \
+            else jnp.iinfo(x.dtype).min
+        x2d = jnp.concatenate(
+            [x2d, jnp.full((x2d.shape[0], npow - n), fill, x.dtype)], axis=1)
+    x2d, r = _pad_rows(x2d)
+    vals, idx = _tk.topk_pallas(x2d, k, interpret=interpret)
+    return (vals[:r].reshape(*lead, k), idx[:r].reshape(*lead, k))
+
+
+isa.register(Instruction(
+    name="c5_topk",
+    spec=OperandSpec(itype="I'", scalar_in=1, vector_in=1, vector_out=2),
+    ref=ref.topk,
+    kernel=_topk_kernel,
+    pipeline_depth=8,
+    doc="descending key/payload sort → top-k values + indices (MoE router)",
+))
+
+
+def topk(x, k: int, mode=None):
+    return isa.call("c5_topk", x, k, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# c6_flashattn
+# ---------------------------------------------------------------------------
+
+def _flashattn_kernel(q, k, v, causal=True, scale=None, *,
+                      interpret: bool = False):
+    b, h, s, d = q.shape
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, k.shape[2], d)
+    vf = v.reshape(b * h, v.shape[2], d)
+    block = 128 if s % 128 == 0 else (64 if s % 64 == 0 else s)
+    out = _fa.flash_attention_pallas(qf, kf, vf, causal=causal, scale=scale,
+                                     block_q=block, block_k=block,
+                                     interpret=interpret)
+    return out.reshape(b, h, s, d)
+
+
+isa.register(Instruction(
+    name="c6_flashattn",
+    spec=OperandSpec(itype="I'", vector_in=2, vector_out=1),  # (q, kv) fused pair
+    ref=ref.flash_attention,
+    kernel=_flashattn_kernel,
+    pipeline_depth=2,
+    doc="fused blockwise attention with carried (m, l) state",
+))
+
+
+def flash_attention(q, k, v, causal=True, scale=None, mode=None):
+    # The ISA operand budget counts register *names*; K and V stream from the
+    # same base address pair (S'-style), so they count as one vector source —
+    # hence manual dispatch here rather than isa.call's 2-operand check.
+    mode = mode or isa.current_mode()
+    if mode == "auto":
+        mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if mode == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale)
+    return _flashattn_kernel(q, k, v, causal=causal, scale=scale,
+                             interpret=(mode == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# The mergesort application (paper §4.3.1): sort-in-chunks + pairwise merges.
+# ---------------------------------------------------------------------------
+
+def sortnet_mergesort(x: jax.Array, base_width: int = 8,
+                      max_kernel_width: int = 4096, mode=None) -> jax.Array:
+    """Sort the last axis using c2_sort for chunks then c1_merge levels.
+
+    Above ``max_kernel_width`` (VMEM working-set bound, the same limit the
+    paper hits when a merge no longer fits one register pair) the remaining
+    merge levels run on the base core (XLA sort over pairs).
+    """
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError("length must be a power of two")
+    if n <= base_width:
+        return sort_chunks(x, width=n, mode=mode)
+    x = sort_chunks(x, width=base_width, mode=mode)
+    w = base_width
+    lead = x.shape[:-1]
+    while w < n:
+        pairs = x.reshape(*lead, n // (2 * w), 2, w)
+        a = pairs[..., 0, :]
+        b = pairs[..., 1, :]
+        if 2 * w <= max_kernel_width:
+            lo, hi = merge_sorted(a.reshape(-1, w), b.reshape(-1, w),
+                                  width=w, mode=mode)
+            merged = jnp.concatenate(
+                [lo.reshape(*lead, n // (2 * w), w),
+                 hi.reshape(*lead, n // (2 * w), w)], axis=-1)
+        else:  # base-core fallback for huge merge levels
+            merged = jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)
+        x = merged.reshape(*lead, n)
+        w *= 2
+    return x

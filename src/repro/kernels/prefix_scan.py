@@ -1,0 +1,131 @@
+"""Carried prefix-scan instructions (paper §4.3.2, Fig. 7) as Pallas kernels.
+
+`c3_prefixsum` pipelines a Hillis–Steele network over each incoming vector
+register *plus one extra stage that adds the running total of all previous
+batches* — that carried total is what lets one short instruction scan an
+arbitrarily long stream without blocking.
+
+On TPU the "batch" is a VMEM block and the carry lives in VMEM scratch
+that persists across the (sequential) minor grid dimension — same trick,
+same non-blocking pipelining (grid step i+1's DMA overlaps step i's adds).
+
+`c4_chunkscan` generalises the carry from (+) to the affine map
+y = a·y_prev + b. That is precisely Mamba2-SSD's inter-chunk state
+recurrence, which is how the paper's instruction shows up inside a modern
+LM stack (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.stream import LANES
+
+
+def _hs_shift_add(x: jax.Array) -> jax.Array:
+    """Hillis–Steele inclusive scan: log2(cols) shifted adds (static)."""
+    r, c = x.shape
+    d = 1
+    while d < c:
+        shifted = jnp.concatenate(
+            [jnp.zeros((r, d), x.dtype), x[:, :-d]], axis=1)
+        x = x + shifted
+        d *= 2
+    return x
+
+
+def _prefix_body(x_ref, o_ref, carry_ref):
+    step = pl.program_id(1)
+
+    @pl.when(step == 0)
+    def _():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    scanned = _hs_shift_add(x_ref[...]) + carry_ref[...]
+    o_ref[...] = scanned
+    carry_ref[...] = scanned[:, -1:]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_rows", "block_cols", "interpret"))
+def prefix_sum_pallas(x: jax.Array, *, block_rows: int = 8,
+                      block_cols: int = 4 * LANES,
+                      interpret: bool = False) -> jax.Array:
+    """Inclusive prefix sum along the last axis of a 2D operand."""
+    rows, cols = x.shape
+    block_cols = min(block_cols, cols)
+    block_rows = min(block_rows, rows)
+    if rows % block_rows or cols % block_cols:
+        raise ValueError(f"shape {(rows, cols)} not divisible by "
+                         f"block ({block_rows}, {block_cols})")
+    grid = (rows // block_rows, cols // block_cols)
+    return pl.pallas_call(
+        _prefix_body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, block_cols), lambda r, c: (r, c))],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda r, c: (r, c)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_rows, 1), x.dtype)],
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# c4_chunkscan: y[i] = a[i] * y[i-1] + b[i]   (per row, carried across blocks)
+# ---------------------------------------------------------------------------
+
+def _affine_hs(a: jax.Array, b: jax.Array):
+    """HS scan under affine composition: (A,B)_i ∘ (A,B)_{i-d}."""
+    r, c = a.shape
+    d = 1
+    while d < c:
+        a_sh = jnp.concatenate([jnp.ones((r, d), a.dtype), a[:, :-d]], axis=1)
+        b_sh = jnp.concatenate([jnp.zeros((r, d), b.dtype), b[:, :-d]], axis=1)
+        b = b + a * b_sh
+        a = a * a_sh
+        d *= 2
+    return a, b
+
+
+def _chunkscan_body(a_ref, b_ref, o_ref, carry_ref):
+    step = pl.program_id(1)
+
+    @pl.when(step == 0)
+    def _():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    acum, bcum = _affine_hs(a_ref[...], b_ref[...])
+    y = acum * carry_ref[...] + bcum     # fold in previous batches' state
+    o_ref[...] = y
+    carry_ref[...] = y[:, -1:]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_rows", "block_cols", "interpret"))
+def chunk_scan_pallas(a: jax.Array, b: jax.Array, *, block_rows: int = 8,
+                      block_cols: int = 4 * LANES,
+                      interpret: bool = False) -> jax.Array:
+    """Affine carried scan along the last axis; a, b same 2D shape."""
+    if a.shape != b.shape:
+        raise ValueError("a and b must match")
+    rows, cols = a.shape
+    block_cols = min(block_cols, cols)
+    block_rows = min(block_rows, rows)
+    if rows % block_rows or cols % block_cols:
+        raise ValueError(f"shape {(rows, cols)} not divisible by "
+                         f"block ({block_rows}, {block_cols})")
+    grid = (rows // block_rows, cols // block_cols)
+    spec = pl.BlockSpec((block_rows, block_cols), lambda r, c: (r, c))
+    return pl.pallas_call(
+        _chunkscan_body,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.promote_types(a.dtype, b.dtype)),
+        scratch_shapes=[pltpu.VMEM((block_rows, 1), jnp.promote_types(a.dtype, b.dtype))],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,241 @@
+"""Sorting-network instructions (paper §2.2 Alg. 1 + §4.3.1) as Pallas kernels.
+
+The paper's `c2_sort` is a bitonic sorting network over one 256-bit vector
+register (8 × 32-bit lanes, 6 CAS layers, 3 cycles); `c1_merge` is the
+last log2(N) layers of an odd-even/bitonic merger that merges two sorted
+registers, writing the lower half to vrd1 and the upper half to vrd2 —
+an I'-type instruction using 2 vector sources *and* 2 vector
+destinations (the 6-operand encoding is what makes it one instruction).
+
+TPU adaptation (DESIGN.md §2): each CAS layer is a vectorised
+compare-and-select between a lane and its XOR-partner lane. Partner
+indices are *static* per layer, so `jnp.take` lowers to lane shuffles on
+the VPU — the whole network fuses into ONE kernel (one "instruction"),
+versus the ~13-instruction min/max/shuffle sequences of fixed SIMD ISAs
+the paper counts in §6. Rows stream through the grid back-to-back, the
+pipelining the paper gets from its `c1_cycles` shift registers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.stream import LANES
+
+
+def _check_pow2(w: int, what: str) -> None:
+    if w < 2 or (w & (w - 1)):
+        raise ValueError(f"{what} must be a power of two ≥ 2, got {w}")
+
+
+# ---------------------------------------------------------------------------
+# The network itself (shared by kernel bodies; built from static numpy index
+# math so every layer is shuffle + select — no data-dependent control flow).
+# ---------------------------------------------------------------------------
+
+def _swap_blocks(x: jax.Array, j: int) -> jax.Array:
+    """Value at lane XOR j — as a static reshape+reverse (a lane shuffle on
+    the VPU; no gather, no captured index tables)."""
+    *lead, w = x.shape
+    xr = x.reshape(*lead, w // (2 * j), 2, j)
+    return xr[..., ::-1, :].reshape(*lead, w)
+
+
+def _cas_layer(keys: jax.Array, payload: Optional[jax.Array],
+               j: int, k: int, descending: bool):
+    """One compare-and-swap layer: partner = lane XOR j, direction from k."""
+    lane = jax.lax.broadcasted_iota(jnp.int32, keys.shape, keys.ndim - 1)
+    lower = (lane & j) == 0                     # partner = lane^j → lower iff bit j unset
+    asc = (lane & k) == 0                       # ascending sub-block?
+    keep_lo = (asc != lower) if descending else (asc == lower)
+
+    kp = _swap_blocks(keys, j)
+    lt = keys < kp
+    eq = keys == kp
+    if payload is None:
+        self_is_lo = lt | (eq & lower)          # lane tiebreak (keys only)
+        take_self = keep_lo == self_is_lo
+        return jnp.where(take_self, keys, kp), None
+    # With payload, ties need a lane-independent total order so equal keys
+    # emerge in ascending-payload order (= lax.top_k tie semantics for the
+    # descending sort used by c5_topk).
+    pp = _swap_blocks(payload, j)
+    tie = (payload > pp) if descending else (payload < pp)
+    self_is_lo = lt | (eq & tie)
+    take_self = keep_lo == self_is_lo
+    return (jnp.where(take_self, keys, kp),
+            jnp.where(take_self, payload, pp))
+
+
+def bitonic_sort_network(keys: jax.Array, payload: Optional[jax.Array] = None,
+                         descending: bool = False):
+    """Full bitonic sort along the last axis (width = static power of 2)."""
+    w = keys.shape[-1]
+    _check_pow2(w, "sort width")
+    k = 2
+    while k <= w:
+        j = k // 2
+        while j >= 1:
+            keys, payload = _cas_layer(keys, payload, j, k, descending)
+            j //= 2
+        k *= 2
+    return (keys, payload) if payload is not None else keys
+
+
+def bitonic_merge_network(keys: jax.Array, payload: Optional[jax.Array] = None,
+                          descending: bool = False):
+    """Merge stages only (`c1_merge`): input already bitonic along last axis."""
+    w = keys.shape[-1]
+    _check_pow2(w, "merge width")
+    j = w // 2
+    while j >= 1:
+        # k = 2w → every sub-block ascending (or descending).
+        keys, payload = _cas_layer(keys, payload, j, 2 * w, descending)
+        j //= 2
+    return (keys, payload) if payload is not None else keys
+
+
+def n_cas_layers(width: int) -> int:
+    """Θ(log²N) layers — the paper's pipeline-depth (c2: width 8 → 6)."""
+    lg = int(np.log2(width))
+    return lg * (lg + 1) // 2
+
+
+# ---------------------------------------------------------------------------
+# c2_sort — sort every contiguous `width`-chunk of each row.
+# ---------------------------------------------------------------------------
+
+def _sort_body(width: int, descending: bool, x_ref, o_ref):
+    x = x_ref[...]
+    r, c = x.shape
+    xr = x.reshape(r, c // width, width)
+    s = bitonic_sort_network(xr, descending=descending)
+    o_ref[...] = s.reshape(r, c)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "width", "descending", "block_rows", "block_cols", "interpret"))
+def sort_chunks_pallas(x: jax.Array, *, width: int = 8,
+                       descending: bool = False, block_rows: int = 8,
+                       block_cols: int = 2 * LANES,
+                       interpret: bool = False) -> jax.Array:
+    """Pallas c2_sort over a 2D operand (rows stream through the grid)."""
+    rows, cols = x.shape
+    _check_pow2(width, "width")
+    block_cols = max(width, min(block_cols, cols))
+    if cols % block_cols or block_cols % width:
+        raise ValueError(f"cols={cols} blocks={block_cols} width={width} "
+                         f"must nest evenly")
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} % block_rows={block_rows} != 0")
+    grid = (rows // block_rows, cols // block_cols)
+    return pl.pallas_call(
+        functools.partial(_sort_body, width, descending),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, block_cols), lambda r, c: (r, c))],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda r, c: (r, c)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# c1_merge — merge two sorted width-chunks: lower→vrd1, upper→vrd2.
+# ---------------------------------------------------------------------------
+
+def _merge_body(width: int, descending: bool, a_ref, b_ref, lo_ref, hi_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    r, c = a.shape
+    ar = a.reshape(r, c // width, width)
+    br = b.reshape(r, c // width, width)[..., ::-1]   # reversed → bitonic
+    both = jnp.concatenate([ar, br], axis=-1)
+    s = bitonic_merge_network(both, descending=descending)
+    lo_ref[...] = s[..., :width].reshape(r, c)
+    hi_ref[...] = s[..., width:].reshape(r, c)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "width", "descending", "block_rows", "block_cols", "interpret"))
+def merge_sorted_pallas(a: jax.Array, b: jax.Array, *, width: Optional[int] = None,
+                        descending: bool = False, block_rows: int = 8,
+                        block_cols: Optional[int] = None,
+                        interpret: bool = False):
+    """Pallas c1_merge: per row, merge sorted chunks of a with those of b."""
+    if a.shape != b.shape or a.dtype != b.dtype:
+        raise ValueError("operands must match")
+    rows, cols = a.shape
+    width = width or cols
+    _check_pow2(width, "width")
+    block_cols = block_cols or max(width, min(2 * LANES, cols))
+    if cols % block_cols or block_cols % width:
+        raise ValueError("cols/block/width must nest evenly")
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} % block_rows={block_rows} != 0")
+    grid = (rows // block_rows, cols // block_cols)
+    spec = pl.BlockSpec((block_rows, block_cols), lambda r, c: (r, c))
+    shp = jax.ShapeDtypeStruct(a.shape, a.dtype)
+    return pl.pallas_call(
+        functools.partial(_merge_body, width, descending),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(shp, shp),
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Batcher odd-even mergesort — the paper's other topology (§2.2 cites both;
+# c1_merge is "the last log2(N) layers of odd-even mergesort"). Same
+# Θ(log²N) depth as bitonic; all-ascending comparators, partner = lane ± k,
+# expressed as static shifts + iota masks (no gathers, no captured arrays).
+# ---------------------------------------------------------------------------
+
+def _shift(x: jax.Array, k: int, fill) -> jax.Array:
+    """Value at lane+k (k>0) or lane+k (k<0 → lane-|k|), edge-filled."""
+    *lead, w = x.shape
+    if k > 0:
+        pad = jnp.full((*lead, k), fill, x.dtype)
+        return jnp.concatenate([x[..., k:], pad], axis=-1)
+    pad = jnp.full((*lead, -k), fill, x.dtype)
+    return jnp.concatenate([pad, x[..., :k]], axis=-1)
+
+
+def _oddeven_cas(keys: jax.Array, p: int, k: int) -> jax.Array:
+    """One odd-even merge layer: compare (x, x+k) for lanes x with
+    x ≡ k mod p (mod 2k) and floor(x/2p) == floor((x+k)/2p)."""
+    w = keys.shape[-1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, keys.shape, keys.ndim - 1)
+    x = lane - (k % p)
+    is_lo = ((x >= 0) & (jnp.remainder(x, 2 * k) < k)
+             & (lane + k < w)
+             & ((lane // (2 * p)) == ((lane + k) // (2 * p))))
+    up = _shift(keys, k, 0)          # partner above (for lo lanes)
+    down = _shift(keys, -k, 0)       # partner below (for hi lanes)
+    is_hi_src = _shift(is_lo.astype(jnp.int32), -k, 0) == 1
+    new = jnp.where(is_lo, jnp.minimum(keys, up), keys)
+    new = jnp.where(is_hi_src, jnp.maximum(new, down), new)
+    return new
+
+
+def oddeven_sort_network(keys: jax.Array) -> jax.Array:
+    """Full Batcher odd-even mergesort along the last axis (ascending)."""
+    w = keys.shape[-1]
+    _check_pow2(w, "sort width")
+    p = 1
+    while p < w:
+        k = p
+        while k >= 1:
+            keys = _oddeven_cas(keys, p, k)
+            k //= 2
+        p *= 2
+    return keys

@@ -1,0 +1,60 @@
+"""c5_topk — router top-k as a key/payload sorting network.
+
+This is where the paper's `c2_sort` lands inside a modern LM: MoE expert
+routing needs, per token, the k largest of E router logits *with their
+indices*. A fixed SIMD ISA spells that as dozens of min/max/shuffle ops
+per CAS layer; here it is ONE instruction — a bitonic network whose CAS
+units move a (key, payload) pair, exactly the paper's 6-operand-style
+"complex instruction" argument (§6) applied to routing.
+
+Payload = lane indices (static iota), so the kernel needs no gather at
+the end: after a descending sort the first k lanes are the top-k values
+and their original positions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .sortnet import bitonic_sort_network
+
+
+def _topk_body(n: int, x_ref, vals_ref, idx_ref):
+    x = x_ref[...]
+    r = x.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (r, n), 1)
+    keys, payload = bitonic_sort_network(x, payload=lane, descending=True)
+    vals_ref[...] = keys
+    idx_ref[...] = payload
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def topk_pallas(x: jax.Array, k: int, *, block_rows: int = 8,
+                interpret: bool = False):
+    """Top-k along the last axis. x: (rows, n) with n a power of two
+    (routers pad E → next pow2 with -inf; see moe.py). Returns
+    (values (rows, k), indices (rows, k)) sorted descending."""
+    rows, n = x.shape
+    if n & (n - 1):
+        raise ValueError(f"n={n} must be a power of two (pad with -inf)")
+    if k > n:
+        raise ValueError(f"k={k} > n={n}")
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} % block_rows={block_rows} != 0")
+    grid = (rows // block_rows,)
+    vals, idx = pl.pallas_call(
+        functools.partial(_topk_body, n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, n), lambda r: (r, 0))],
+        out_specs=(pl.BlockSpec((block_rows, n), lambda r: (r, 0)),
+                   pl.BlockSpec((block_rows, n), lambda r: (r, 0))),
+        out_shape=(jax.ShapeDtypeStruct((rows, n), x.dtype),
+                   jax.ShapeDtypeStruct((rows, n), jnp.int32)),
+        interpret=interpret,
+    )(x)
+    return vals[:, :k], idx[:, :k]

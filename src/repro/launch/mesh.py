@@ -1,0 +1,26 @@
+"""Production meshes. Function, not module constant — importing this
+module must never touch jax device state (the dry-run sets its
+XLA_FLAGS before first jax init)."""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(n_devices: int | None = None, model_parallel: int = 16):
+    """Re-form a (data, model) mesh from whatever devices survive —
+    the elastic-restart path (checkpoints are mesh-agnostic)."""
+    n = n_devices or len(jax.devices())
+    model = math.gcd(n, model_parallel)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)

@@ -1,0 +1,309 @@
+"""The LM: blocks, scan-over-layers stack, loss, prefill and decode.
+
+Pure-functional: params/caches are pytrees, every entry point is
+jit/pjit-able. Layer params are stacked on a leading (L,) axis and the
+stack is a lax.scan (compact HLO for 80-layer models — essential for the
+512-device dry-run compiles).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import cross_entropy, embed_tokens, mlp, rmsnorm, unembed
+from .params import abstract_params, init_params, logical_axes  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _mixer(cfg: ModelConfig, p: dict, h: jax.Array, positions: jax.Array):
+    if cfg.family == "ssm":
+        return ssm_mod.ssd_forward(cfg, p["ssm"], h)
+    if cfg.family == "hybrid":  # Hymba: parallel attention + mamba heads
+        a = attn.attention(cfg, p["attn"], h, positions)
+        s = ssm_mod.ssd_forward(cfg, p["ssm"], h)
+        return (a + s) * 0.5
+    return attn.attention(cfg, p["attn"], h, positions)
+
+
+def block(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    """One transformer/ssm/hybrid block. Returns (x, aux)."""
+    h = rmsnorm(x, p["norm1"])
+    x = x + _mixer(cfg, p, h, positions)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff or cfg.n_experts:
+        h2 = rmsnorm(x, p["norm2"])
+        if cfg.n_experts:
+            y, aux = moe_mod.moe_layer(cfg, p["moe"], h2)
+        else:
+            y = mlp(p["mlp"], h2, cfg.mlp_gated)
+        x = x + y
+    x = constrain(x, ("batch", "seq_sp" if cfg.sp else None,
+                      "act_embed"))
+    return x, aux
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+def stack(cfg: ModelConfig, layer_params, x: jax.Array,
+          positions: jax.Array, train: bool):
+    fn = functools.partial(block, cfg)
+    if train:
+        fn = _remat(cfg, fn)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = fn(lp, h, positions)
+        return (h, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               layer_params, unroll=cfg.scan_unroll)
+    return x, aux / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, batch: dict, train: bool):
+    if "embeddings" in batch:            # stubbed VLM/audio frontend
+        x = batch["embeddings"].astype(jnp.dtype(cfg.act_dtype))
+    else:
+        x = embed_tokens(params["embed"], batch["tokens"])
+        x = x.astype(jnp.dtype(cfg.act_dtype))
+    x = constrain(x, ("batch", None, "act_embed"))
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)   # uniform across batch
+    x, aux = stack(cfg, params["layers"], x, positions, train)
+    return rmsnorm(x, params["final_norm"]), aux
+
+
+def _unembed_w(cfg: ModelConfig, params):
+    return (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict,
+            aux_weight: float = 0.01):
+    x, aux = forward(cfg, params, batch, train=True)
+    w = _unembed_w(cfg, params)
+    if cfg.ce_chunk and x.shape[1] % cfg.ce_chunk == 0:
+        # chunk unembed+CE over seq: never materialise (B,S,V) logits
+        nc = x.shape[1] // cfg.ce_chunk
+        xc = x.reshape(x.shape[0], nc, cfg.ce_chunk, x.shape[2])
+        tc = batch["targets"].reshape(x.shape[0], nc, cfg.ce_chunk)
+
+        def chunk(carry, inp):
+            xx, tt = inp
+            logits = unembed(w, xx, cfg.vocab)
+            l, _ = cross_entropy(logits, tt)
+            return carry + l, None
+
+        tot, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32),
+                              (jnp.moveaxis(xc, 1, 0),
+                               jnp.moveaxis(tc, 1, 0)),
+                              unroll=nc if cfg.scan_unroll > 1 else 1)
+        loss = tot / nc
+        metrics = {"ce": loss, "z_loss": jnp.zeros((), jnp.float32)}
+    else:
+        logits = unembed(w, x, cfg.vocab)
+        loss, metrics = cross_entropy(logits, batch["targets"])
+    loss = loss + aux_weight * aux
+    metrics.update(loss=loss, moe_aux=aux)
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _abstract_layer_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    dt = jnp.dtype(cfg.act_dtype)
+    c = {}
+    if cfg.has_attention:
+        t = attn.cache_len(cfg, seq_len)
+        kv = (batch, t, cfg.n_kv_heads, cfg.head_dim)
+        c["k"] = jax.ShapeDtypeStruct(kv, dt)
+        c["v"] = jax.ShapeDtypeStruct(kv, dt)
+    if cfg.has_ssm:
+        w = cfg.conv_width - 1
+        c["conv"] = {
+            "x": jax.ShapeDtypeStruct((batch, w, cfg.d_inner), dt),
+            "B": jax.ShapeDtypeStruct((batch, w, cfg.ssm_state), dt),
+            "C": jax.ShapeDtypeStruct((batch, w, cfg.ssm_state), dt),
+        }
+        c["state"] = jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+            jnp.float32)
+    return c
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Stacked (L, ...) cache ShapeDtypeStructs (dry-run input specs)."""
+    layer = _abstract_layer_cache(cfg, batch, seq_len)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+        layer)
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    axes = {}
+    if cfg.has_attention:
+        kvax = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        axes["k"] = kvax
+        axes["v"] = kvax
+    if cfg.has_ssm:
+        axes["conv"] = {
+            "x": ("layers", "batch", None, "ssm_inner"),
+            "B": ("layers", "batch", None, None),
+            "C": ("layers", "batch", None, None),
+        }
+        axes["state"] = ("layers", "batch", "ssm_heads", None, None)
+    return axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, seq_len))
+
+
+def grow_cache(cfg: ModelConfig, cache: dict, prefill_len: int,
+               capacity: int) -> dict:
+    """Make a prefill cache decodable up to `capacity` positions.
+
+    Non-SWA: zero-pad the seq dim. SWA: the rolling cache is already at
+    window size; rotate entries so absolute position p sits at slot
+    p % window (the decode-side invariant)."""
+    if not cfg.has_attention:
+        return cache
+    new = dict(cache)
+    for key in ("k", "v"):
+        c = cache[key]
+        if cfg.swa_window:
+            w = c.shape[-3]
+            if prefill_len > w:
+                c = jnp.roll(c, shift=prefill_len % w, axis=-3)
+        else:
+            pad = capacity - c.shape[-3]
+            if pad > 0:
+                widths = [(0, 0)] * c.ndim
+                widths[-3] = (0, pad)
+                c = jnp.pad(c, widths)
+        new[key] = c
+    return new
+
+
+def _block_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+                  pos: jax.Array):
+    h = rmsnorm(x, p["norm1"])
+    new_cache = dict(cache)
+    outs = []
+    if cfg.has_attention:
+        a, nk, nv = attn.attention_decode(cfg, p["attn"], h,
+                                          cache["k"], cache["v"], pos)
+        new_cache["k"], new_cache["v"] = nk, nv
+        outs.append(a)
+    if cfg.has_ssm:
+        s, nconv, nstate = ssm_mod.ssd_decode(cfg, p["ssm"], h,
+                                              cache["conv"], cache["state"])
+        new_cache["conv"], new_cache["state"] = nconv, nstate
+        outs.append(s)
+    mix = outs[0] if len(outs) == 1 else (outs[0] + outs[1]) * 0.5
+    x = x + mix
+    if cfg.d_ff or cfg.n_experts:
+        h2 = rmsnorm(x, p["norm2"])
+        if cfg.n_experts:
+            y, _ = moe_mod.moe_layer(cfg, p["moe"], h2)
+        else:
+            y = mlp(p["mlp"], h2, cfg.mlp_gated)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens: jax.Array,
+                pos: jax.Array):
+    """One serve step: tokens (B, 1) int32, pos scalar int32.
+
+    Returns (logits (B, vocab), new_cache)."""
+    x = embed_tokens(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+
+    def body(h, inp):
+        lp, lc = inp
+        h, nc = _block_decode(cfg, lp, h, lc, pos)
+        return h, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache),
+                                unroll=cfg.scan_unroll)
+    x = rmsnorm(x, params["final_norm"])
+    logits = unembed(_unembed_w(cfg, params), x[:, 0], cfg.vocab)
+    return logits, new_cache
+
+
+def _block_prefill(cfg: ModelConfig, p: dict, x: jax.Array,
+                   positions: jax.Array):
+    """block() that also emits the decode cache (no double compute)."""
+    h = rmsnorm(x, p["norm1"])
+    cache = {}
+    outs = []
+    if cfg.has_attention:
+        a, (k, v) = attn.attention(cfg, p["attn"], h, positions,
+                                   return_cache=True)
+        cache["k"], cache["v"] = k, v
+        outs.append(a)
+    if cfg.has_ssm:
+        s_out, (state, conv) = ssm_mod.ssd_forward(cfg, p["ssm"], h,
+                                                   return_state=True)
+        cache["state"], cache["conv"] = state, conv
+        outs.append(s_out)
+    mix = outs[0] if len(outs) == 1 else (outs[0] + outs[1]) * 0.5
+    x = x + mix
+    if cfg.d_ff or cfg.n_experts:
+        h2 = rmsnorm(x, p["norm2"])
+        if cfg.n_experts:
+            y, _ = moe_mod.moe_layer(cfg, p["moe"], h2)
+        else:
+            y = mlp(p["mlp"], h2, cfg.mlp_gated)
+        x = x + y
+    x = constrain(x, ("batch", "seq_sp" if cfg.sp else None,
+                      "act_embed"))
+    return x, cache
+
+
+def prefill(cfg: ModelConfig, params, batch: dict):
+    """Full-sequence pass building the decode cache.
+
+    Returns (last-position logits (B, vocab), cache)."""
+    if "embeddings" in batch:
+        x = batch["embeddings"].astype(jnp.dtype(cfg.act_dtype))
+    else:
+        x = embed_tokens(params["embed"], batch["tokens"])
+        x = x.astype(jnp.dtype(cfg.act_dtype))
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)   # uniform across batch
+
+    def body(h, lp):
+        return _block_prefill(cfg, lp, h, positions)
+
+    x, cache = jax.lax.scan(body, x, params["layers"],
+                            unroll=cfg.scan_unroll)
+    x = rmsnorm(x, params["final_norm"])
+    logits = unembed(_unembed_w(cfg, params), x[:, -1], cfg.vocab)
+    return logits, cache

@@ -1,0 +1,2 @@
+from .optimizers import (Adafactor, AdamW, clip_by_global_norm, get_optimizer,
+                         warmup_cosine)

@@ -1,0 +1,152 @@
+"""Optimizers built on pure JAX (no optax in this environment).
+
+AdamW for the ≤100B archs; Adafactor (factored second moment, no first
+moment) for the ≥300B MoEs where Adam's fp32 m/v cannot fit the pod
+(DESIGN.md §9). Optimizer states inherit the parameter's logical axes so
+they shard identically (ZeRO-style: state lives wherever the param
+shard lives).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), n
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+
+    def init(self, params):
+        dt = jnp.dtype(self.state_dtype)
+        z = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def state_logical_axes(self, param_axes):
+        return {"m": param_axes, "v": param_axes}
+
+    def update(self, grads, state, params, step):
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1 - self.b1 ** t
+        c2 = 1 - self.b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, m.astype(jnp.dtype(self.state_dtype)), v.astype(
+                jnp.dtype(self.state_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree.map(  # noqa: E731
+            lambda t_: t_[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second moment, no momentum (Shazeer & Stern, 2018)."""
+    lr: Callable | float = 1e-3
+    decay: float = 0.8           # t^-decay second-moment decay schedule
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        def z(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(z, params)}
+
+    def state_logical_axes(self, param_axes):
+        def ax(a):
+            if len(a) >= 2:
+                return {"vr": a[:-1], "vc": a[:-2] + a[-1:]}
+            return {"v": a}
+        return {"f": jax.tree.map(ax, param_axes,
+                                  is_leaf=lambda x: isinstance(x, tuple))}
+
+    def update(self, grads, state, params, step):
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-self.decay)
+
+        def upd(g, f, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if p.ndim >= 2:
+                vr = beta * f["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * f["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] / jnp.mean(
+                    vr, axis=-1, keepdims=True)[..., None]) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + self.eps)
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + self.eps)
+                nf = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, nf
+
+        out = jax.tree.map(upd, grads, state["f"], params,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and ("vr" in x or "v" in x))
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_f = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"f": new_f}
+
+
+def get_optimizer(name: str, lr=None, total_steps: int = 10_000,
+                  state_dtype: str = "float32"):
+    sched = warmup_cosine(lr or 3e-4, min(2000, total_steps // 10 + 1),
+                          total_steps)
+    if name == "adamw":
+        return AdamW(lr=sched, state_dtype=state_dtype)
+    if name == "adafactor":
+        return Adafactor(lr=sched)   # second moment factored; fp32 tiny
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,2 @@
+from .analysis import (HW_V5E, CellReport, analyze_compiled,
+                       collective_bytes, roofline_terms)

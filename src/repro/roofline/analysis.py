@@ -1,0 +1,170 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_chip   / peak_FLOP/s
+    memory     = HLO_bytes_per_chip   / HBM_bw
+    collective = coll_bytes_per_chip  / link_bw
+
+`compiled.cost_analysis()` is per-device for SPMD modules (verified
+empirically: a (512×128)@(128×256) matmul sharded 4-way reports 2mnk/4
+flops), so all three terms are per-chip seconds directly.
+
+Collective bytes are NOT in cost_analysis: we parse the post-SPMD
+optimized HLO, summing result-shape bytes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute, scaled by
+the ring-volume factor for its op kind and replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Optional
+
+import numpy as np
+
+# TPU v5e (target hardware; per chip)
+HW_V5E = {
+    "flops_bf16": 197e12,        # peak bf16 FLOP/s
+    "hbm_bw": 819e9,             # HBM bytes/s
+    "ici_bw": 50e9,              # per-link ICI bytes/s (in-pod)
+    "dcn_bw": 9e9,               # cross-pod (pod axis) bytes/s — conservative
+    "hbm_gib": 16.0,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|\S+?\[[^\]]*\]\S*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _volume_factor(op: str, n: int) -> float:
+    """Per-chip bytes moved per result byte (ring algorithms)."""
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op == "all-gather":
+        return (n - 1) / n
+    if op == "reduce-scatter":
+        return float(n - 1)          # operand = n × result
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0                        # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip collective traffic by op kind, from optimized HLO text."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("type"))
+        n = _group_size(line)
+        out[op] = out.get(op, 0.0) + b * _volume_factor(op, n)
+        count[op] = count.get(op, 0) + 1
+    out["total"] = sum(v for k, v in out.items())
+    out["counts"] = count
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   hw: dict = HW_V5E, slow_axis_bytes: float = 0.0) -> dict:
+    t_compute = flops / hw["flops_bf16"]
+    t_memory = hbm_bytes / hw["hbm_bw"]
+    t_coll = coll_bytes / hw["ici_bw"] + slow_axis_bytes / hw["dcn_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_coll)
+    terms.update(
+        dominant=dom,
+        step_time_lower_bound_s=bound,
+        roofline_fraction=t_compute / bound if bound > 0 else 0.0,
+    )
+    return terms
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: dict
+    memory: dict
+    terms: dict
+    model_flops: float              # 6·N·D (global)
+    useful_ratio: float             # MODEL_FLOPS / (HLO flops × chips)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     n_chips: int, model_flops: float,
+                     hw: dict = HW_V5E) -> CellReport:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_gib": ma.argument_size_in_bytes / 2**30,
+        "output_gib": ma.output_size_in_bytes / 2**30,
+        "temp_gib": ma.temp_size_in_bytes / 2**30,
+        "alias_gib": ma.alias_size_in_bytes / 2**30,
+        "peak_gib": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        / 2**30,
+        "fits_v5e": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        / 2**30 <= hw["hbm_gib"],
+    }
+    terms = roofline_terms(flops, hbm, coll["total"], hw)
+    useful = model_flops / (flops * n_chips) if flops else 0.0
+    return CellReport(arch=arch, shape=shape, mesh=mesh_name,
+                      n_chips=n_chips, flops_per_chip=flops,
+                      hbm_bytes_per_chip=hbm,
+                      coll_bytes_per_chip=coll["total"],
+                      coll_breakdown=coll, memory=mem, terms=terms,
+                      model_flops=model_flops, useful_ratio=useful)

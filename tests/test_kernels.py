@@ -1,0 +1,209 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs. ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def arr(shape, dtype):
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        return jnp.asarray(RNG.integers(-10_000, 10_000, shape), dtype)
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# c2_sort
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,width", [
+    ((1, 8), 8), ((5, 64), 8), ((16, 256), 16), ((3, 128), 4),
+    ((7, 32), 32), ((2, 1024), 64),
+])
+def test_sort_chunks(shape, width, dtype):
+    x = arr(shape, dtype)
+    got = ops.sort_chunks(x, width=width, mode="interpret")
+    want = ref.sort_chunks(x, width=width)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sort_descending():
+    x = arr((4, 64), jnp.float32)
+    got = ops.sort_chunks(x, width=8, descending=True, mode="interpret")
+    want = ref.sort_chunks(x, width=8, descending=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sort_3d_operand():
+    x = arr((2, 3, 32), jnp.float32)
+    got = ops.sort_chunks(x, width=8, mode="interpret")
+    want = ref.sort_chunks(x, width=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# c1_merge
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize("rows,w", [(1, 8), (4, 16), (9, 64), (16, 128)])
+def test_merge_sorted(rows, w, dtype):
+    a = jnp.sort(arr((rows, w), dtype), axis=-1)
+    b = jnp.sort(arr((rows, w), dtype), axis=-1)
+    lo, hi = ops.merge_sorted(a, b, mode="interpret")
+    rlo, rhi = ref.merge_sorted(a, b)
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(rlo))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(rhi))
+
+
+def test_mergesort_app():
+    for n in (8, 64, 512, 4096):
+        x = arr((3, n), jnp.float32)
+        got = ops.sortnet_mergesort(x, mode="interpret")
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.sort(np.asarray(x), axis=-1))
+
+
+def test_mergesort_large_fallback():
+    # above max_kernel_width the base core (XLA sort) finishes the levels
+    x = arr((1, 16384), jnp.float32)
+    got = ops.sortnet_mergesort(x, max_kernel_width=1024, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.sort(np.asarray(x), axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# c3_prefixsum / c4_chunkscan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 8), (4, 128), (8, 1024), (3, 4096)])
+def test_prefix_sum(shape):
+    x = arr(shape, jnp.float32)
+    got = ops.prefix_sum(x, mode="interpret")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.cumsum(np.asarray(x), axis=-1),
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_exclusive_prefix_sum():
+    x = arr((4, 64), jnp.float32)
+    got = ops.exclusive_prefix_sum(x, mode="interpret")
+    want = np.cumsum(np.asarray(x), axis=-1) - np.asarray(x)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 16), (4, 256), (8, 1024)])
+def test_chunk_scan(shape):
+    a = jnp.asarray(RNG.uniform(0.2, 1.0, shape), jnp.float32)
+    b = arr(shape, jnp.float32)
+    got = ops.chunk_scan(a, b, mode="interpret")
+    want = ref.chunk_scan(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunk_scan_matches_sequential():
+    a = jnp.asarray(RNG.uniform(0.2, 1.0, (2, 64)), jnp.float32)
+    b = arr((2, 64), jnp.float32)
+    got = np.asarray(ops.chunk_scan(a, b, mode="interpret"))
+    y = np.zeros(2)
+    for i in range(64):
+        y = np.asarray(a[:, i]) * y + np.asarray(b[:, i])
+        np.testing.assert_allclose(got[:, i], y, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# c0 streaming family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [64, 1000, 5000, 65536])
+def test_stream_family(n):
+    a = arr((n,), jnp.float32)
+    b = arr((n,), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.stream_copy(a, mode="interpret")), np.asarray(a))
+    np.testing.assert_allclose(
+        np.asarray(ops.stream_scale(a, 2.5, mode="interpret")),
+        np.asarray(a) * 2.5, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ops.stream_add(a, b, mode="interpret")),
+        np.asarray(a) + np.asarray(b), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ops.stream_triad(a, b, 3.0, mode="interpret")),
+        np.asarray(a) + 3.0 * np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# c5_topk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,n,k", [
+    (1, 8, 2), (16, 384, 8), (32, 8, 2), (8, 512, 16), (4, 151, 5),
+])
+def test_topk(rows, n, k):
+    x = arr((rows, n), jnp.float32)
+    v, i = ops.topk(x, k, mode="interpret")
+    rv, ri = ref.topk(x, k)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_topk_ties_deterministic():
+    x = jnp.zeros((4, 16), jnp.float32)
+    v, i = ops.topk(x, 4, mode="interpret")
+    rv, ri = ref.topk(x, 4)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+# ---------------------------------------------------------------------------
+# c6_flashattn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,s,d", [
+    (1, 1, 128, 64), (2, 4, 128, 64), (1, 2, 256, 128), (2, 2, 64, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, h, s, d, causal):
+    q = arr((b, h, s, d), jnp.float32)
+    k = arr((b, h, s, d), jnp.float32)
+    v = arr((b, h, s, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, mode="interpret")
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = arr((1, 2, 128, 64), jnp.bfloat16)
+    k = arr((1, 2, 128, 64), jnp.bfloat16)
+    v = arr((1, 2, 128, 64), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, mode="interpret")
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# odd-even mergesort topology (paper §2.2's other network)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w", [2, 8, 32, 128, 512])
+def test_oddeven_network_sorts(w):
+    from repro.kernels.sortnet import oddeven_sort_network
+    x = arr((6, w), jnp.float32)
+    out = np.asarray(oddeven_sort_network(x))
+    np.testing.assert_array_equal(out, np.sort(np.asarray(x), axis=-1))
+
+
+def test_oddeven_matches_bitonic():
+    from repro.kernels.sortnet import (bitonic_sort_network,
+                                       oddeven_sort_network)
+    x = arr((4, 64), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(oddeven_sort_network(x)),
+        np.asarray(bitonic_sort_network(x)))
