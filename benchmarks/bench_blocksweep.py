@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.burst_model import PAPER_AXI, TPU_V5E_HBM
-from repro.kernels.stream_copy import _as2d, COPY
+from repro.core.stream import flatten_to_blocks
 
 from .common import row, time_fn
 
@@ -36,7 +36,7 @@ def main() -> None:
     import jax
 
     def copy_at_block(block_cols):
-        x2d, _ = _as2d(x, block_cols)
+        x2d, _ = flatten_to_blocks(x, block_cols)
 
         def body(i_ref, o_ref):
             o_ref[...] = i_ref[...]

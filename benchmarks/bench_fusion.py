@@ -1,0 +1,97 @@
+"""Fused instruction programs vs unfused chains (core/program.py).
+
+The paper's wide-operand instructions reduce instruction count by doing
+more work per issue; our "one issue" is one pallas_call. This benchmark
+runs scale→add and scale→add→copy chains both ways and reports:
+
+  * modeled HBM bytes moved (the roofline argument — machine-independent):
+    a fused chain touches only external operands, an unfused chain spills
+    every intermediate to HBM. Acceptance floor: ≥ 1.5× reduction.
+  * pallas_call count (instruction-count analogue, from the jaxpr);
+  * wall clock: interpret mode on CPU (relative only), real kernels when
+    a TPU backend is present.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa
+from repro.kernels import ops  # noqa: F401 — registers the ISA
+from repro.roofline.analysis import program_fusion_report
+
+from .common import row, time_fn
+
+
+def _count_pallas_calls(fn, *args) -> int:
+    return str(jax.make_jaxpr(fn)(*args)).count("pallas_call")
+
+
+CHAINS = {
+    # name -> (instruction names, unfused composition, operand builder)
+    "scale_add": (
+        ("c0_scale", "c0_add"),
+        lambda mode, s, x, b: ops.stream_add(
+            ops.stream_scale(x, s, mode=mode), b, mode=mode),
+        lambda fused, mode, s, x, b: fused(s, x, b, mode=mode),
+    ),
+    "scale_add_copy": (
+        ("c0_scale", "c0_add", "c0_copy"),
+        lambda mode, s, x, b: ops.stream_copy(
+            ops.stream_add(ops.stream_scale(x, s, mode=mode), b, mode=mode),
+            mode=mode),
+        lambda fused, mode, s, x, b: fused(s, x, b, mode=mode),
+    ),
+}
+
+
+def main() -> None:
+    on_tpu = jax.default_backend() == "tpu"
+    mode = "kernel" if on_tpu else "interpret"
+    n = (1 << 22) if on_tpu else (1 << 16)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    s = 3.0
+
+    for name, (instr_names, unfused_fn, fused_fn) in CHAINS.items():
+        fused = isa.fuse(*instr_names)
+
+        # -- modeled HBM traffic (the paper's bytes-per-issue argument) ----
+        rep = program_fusion_report(fused.program, n, jnp.float32)
+        red = rep["bytes_reduction"]
+        row(f"fusion_{name}_hbm_bytes_fused", 0.0,
+            f"{fused.program.hbm_bytes_fused(n, jnp.float32)}B")
+        row(f"fusion_{name}_hbm_bytes_unfused", 0.0,
+            f"{fused.program.hbm_bytes_unfused(n, jnp.float32)}B")
+        row(f"fusion_{name}_bytes_reduction", 0.0,
+            f"{red:.2f}x(floor:1.5x)")
+        row(f"fusion_{name}_roofline_speedup_bound", 0.0,
+            f"{rep['speedup_bound']:.2f}x")
+        assert red >= 1.5, f"{name}: bytes reduction {red:.2f}x < 1.5x"
+
+        # -- pallas_call count (instruction-count analogue) ----------------
+        n_fused = _count_pallas_calls(
+            lambda s, x, b: fused_fn(fused, "interpret", s, x, b), s, x, b)
+        n_unf = _count_pallas_calls(
+            lambda s, x, b: unfused_fn("interpret", s, x, b), s, x, b)
+        row(f"fusion_{name}_pallas_calls", 0.0,
+            f"fused:{n_fused}_unfused:{n_unf}")
+        assert n_fused == 1, f"{name}: fused chain emitted {n_fused} calls"
+
+        # -- wall clock ----------------------------------------------------
+        fj = jax.jit(lambda s, x, b: fused_fn(fused, mode, s, x, b))
+        uj = jax.jit(lambda s, x, b: unfused_fn(mode, s, x, b))
+        np.testing.assert_allclose(np.asarray(fj(s, x, b)),
+                                   np.asarray(uj(s, x, b)),
+                                   rtol=1e-6, atol=1e-6)
+        tf = time_fn(fj, s, x, b)
+        tu = time_fn(uj, s, x, b)
+        tag = "tpu" if on_tpu else "cpu_interpret"
+        row(f"fusion_{name}_walltime_{tag}", tf * 1e6,
+            f"unfused:{tu * 1e6:.1f}us_ratio:{tu / tf:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

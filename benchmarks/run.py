@@ -18,8 +18,8 @@ def main() -> None:
     p.add_argument("--only", default=None)
     args = p.parse_args()
 
-    from . import (bench_blocksweep, bench_core_overhead, bench_opcount,
-                   bench_prefix, bench_sort, bench_stream)
+    from . import (bench_blocksweep, bench_core_overhead, bench_fusion,
+                   bench_opcount, bench_prefix, bench_sort, bench_stream)
     suites = {
         "fig3_blocksweep": bench_blocksweep.main,
         "fig4_stream": bench_stream.main,
@@ -27,6 +27,7 @@ def main() -> None:
         "sec431_sort": bench_sort.main,
         "sec432_prefix": bench_prefix.main,
         "sec6_opcount": bench_opcount.main,
+        "fusion_programs": bench_fusion.main,
     }
     print("name,us_per_call,derived")
     failed = []

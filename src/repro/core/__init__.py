@@ -1,16 +1,23 @@
 # The paper's primary contribution, adapted to TPU/JAX:
-#   isa         — I'/S' instruction types, registry, ref/kernel dispatch
-#   template    — Pallas instruction templates (paper Alg. 1)
+#   isa         — I'/S'/P' instruction types, registry, ref/kernel dispatch,
+#                 instruction fusion (Registry.fuse)
+#   template    — Pallas instruction templates (paper Alg. 1) + Stage
+#   program     — fused instruction programs: N stages, one pallas_call
 #   stream      — VLEN / DMA-block geometry (paper cache hierarchy, §3.1)
 #   burst_model — B_eff(block) law behind Fig. 3
 from . import isa
 from .burst_model import PAPER_AXI, TPU_V5E_HBM, TPU_V5E_ICI, BurstModel
-from .isa import Instruction, OperandSpec, Registry
-from .stream import LANES, SUBLANES, VMEM_BYTES, StreamConfig, pad_vocab, round_up
-from .template import KernelTemplate
+from .isa import FusedProgram, Instruction, OperandSpec, Registry
+from .program import Program
+from .stream import (LANES, SUBLANES, VMEM_BYTES, StreamConfig,
+                     as_rows, flatten_to_blocks, pad_rows, pad_vocab,
+                     round_up)
+from .template import KernelTemplate, Stage
 
 __all__ = [
     "isa", "Instruction", "OperandSpec", "Registry", "KernelTemplate",
+    "Stage", "Program", "FusedProgram",
     "StreamConfig", "BurstModel", "PAPER_AXI", "TPU_V5E_HBM", "TPU_V5E_ICI",
     "LANES", "SUBLANES", "VMEM_BYTES", "pad_vocab", "round_up",
+    "as_rows", "pad_rows", "flatten_to_blocks",
 ]

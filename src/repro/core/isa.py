@@ -41,6 +41,11 @@ ITYPE_LIMITS = {
     # itype: (scalar_in, scalar_out, vector_in, vector_out, total)
     "I'": (1, 1, 2, 2, 6),
     "S'": (2, 1, 1, 1, 5),
+    # P'-type: the widened encoding of a FUSED program. A fused chain is one
+    # reconfigurable region, so it gets a double-width I' operand budget for
+    # its merged external operand list (per-stage I'/S' limits still applied
+    # at registration; see Registry.fuse / core/program.py).
+    "P'": (2, 2, 4, 4, 12),
 }
 
 
@@ -97,6 +102,10 @@ class Instruction:
     pipeline_depth: int = 1          # paper's c*_cycles
     stream: StreamConfig = dataclasses.field(default_factory=StreamConfig)
     doc: str = ""
+    # KernelTemplate whose Stage this instruction contributes to fused
+    # programs (Registry.fuse). None → not fusable. The oracle convention
+    # for fusion is ``ref(*vectors, *scalars)``.
+    template: Optional[Any] = None
 
     def __post_init__(self):
         if not callable(self.ref):
@@ -104,6 +113,60 @@ class Instruction:
 
     def __call__(self, *operands, mode: Optional[str] = None, **kw):
         return _REGISTRY.dispatch(self.name, *operands, mode=mode, **kw)
+
+
+@dataclasses.dataclass
+class FusedProgram:
+    """A chain of registered instructions fused into one pallas_call.
+
+    Built by :meth:`Registry.fuse`. Dispatch honours the registry modes:
+      * ``ref``       — function composition of the per-stage oracles (the
+                        base core runs the whole chain in software);
+      * ``kernel``    — the fused Program's single pallas_call on TPU;
+      * ``interpret`` — the same single pallas_call, simulated on CPU;
+      * ``auto``      — kernel iff running on TPU, else ref.
+
+    Operand order: for each stage in chain order, its scalars then its
+    non-chained vector operands (see ``core/program.py``).
+    """
+
+    name: str
+    spec: OperandSpec                    # merged external list, P'-type
+    instrs: tuple
+    program: Any                         # repro.core.program.Program
+    registry: "Registry"
+
+    def __call__(self, *operands, mode: Optional[str] = None):
+        if len(operands) != self.spec.n_inputs:
+            raise TypeError(
+                f"{self.name}: expected {self.spec.n_inputs} operands "
+                f"({self.spec.scalar_in} scalar + {self.spec.vector_in} "
+                f"vector, per-stage order), got {len(operands)}")
+        mode = mode or self.registry.mode
+        if mode not in Registry.MODES:
+            raise ValueError(f"mode must be one of {Registry.MODES}")
+        if mode == "auto":
+            mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+        if mode == "ref":
+            # ref composes oracles on the original shapes; reject exactly
+            # the operand lists the kernel path (validated inside
+            # Program.__call__) would reject.
+            self.program.check_vector_operands(operands)
+            return self._ref(*operands)
+        return self.program(*operands, interpret=(mode == "interpret"))
+
+    def _ref(self, *operands):
+        """Compose the registered oracles — fused correctness for free."""
+        per_stage = self.program.split_operands(operands)
+        outs: tuple = ()
+        for instr, (scalars, ext) in zip(self.instrs, per_stage):
+            ins = tuple(outs) + tuple(ext)
+            res = instr.ref(*ins, *scalars)
+            outs = res if isinstance(res, tuple) else (res,)
+        return outs[0] if len(outs) == 1 else outs
+
+    def pipeline_depth(self) -> int:
+        return self.program.pipeline_depth()
 
 
 class Registry:
@@ -144,6 +207,35 @@ class Registry:
     def bind_kernel(self, name: str, kernel: Callable) -> None:
         """Attach/replace the Pallas implementation of an instruction."""
         self.get(name).kernel = kernel
+
+    # -- fusion ---------------------------------------------------------------
+    def fuse(self, *names: str, name: Optional[str] = None) -> FusedProgram:
+        """Fuse registered instructions into one reconfigurable region.
+
+        ``fuse("c0_scale", "c0_add")(s, x, b)`` lowers to a single
+        pallas_call computing ``add(scale(s, x), b)``. Raises ValueError at
+        fuse() time if the chain doesn't compose (shape-changing stages,
+        output/input arity mismatch) or if the merged external operand
+        list exceeds the widened P'-type encoding budget.
+        """
+        from .program import Program      # deferred: program is isa-free
+        if not names:
+            raise ValueError("fuse() needs at least one instruction name")
+        instrs = tuple(self.get(n) for n in names)
+        for instr in instrs:
+            if instr.template is None:
+                raise ValueError(
+                    f"{instr.name}: not fusable — no KernelTemplate "
+                    f"registered (template-backed instructions only)")
+        prog = Program(tuple(i.template.stage() for i in instrs),
+                       name=name or "+".join(names))
+        # the merged external operand list IS the fused encoding: validate
+        # it against the widened P' budget (raises ValueError on exceed).
+        spec = OperandSpec(itype="P'", scalar_in=prog.n_scalar_in,
+                           scalar_out=0, vector_in=prog.n_ext_vec_in,
+                           vector_out=prog.n_vec_out)
+        return FusedProgram(name=prog.name, spec=spec, instrs=instrs,
+                            program=prog, registry=self)
 
     # -- lookup ---------------------------------------------------------------
     def get(self, name: str) -> Instruction:
@@ -212,6 +304,7 @@ _REGISTRY = Registry()
 register = _REGISTRY.register
 define = _REGISTRY.define
 bind_kernel = _REGISTRY.bind_kernel
+fuse = _REGISTRY.fuse
 get = _REGISTRY.get
 names = _REGISTRY.names
 use = _REGISTRY.use

@@ -1,0 +1,375 @@
+"""Fused instruction programs: N registered instructions, ONE pallas_call.
+
+The paper's wide-operand I'/S' encodings exist to do more work per
+instruction issue; the TPU analogue of "one issue" is one ``pallas_call``.
+Chaining unfused ops round-trips every intermediate through HBM — exactly
+the traffic the paper's reconfigurable region avoids by keeping values in
+the datapath. A :class:`Program` is the software form of a *larger*
+reconfigurable region: it takes the :class:`~repro.core.template.Stage`
+of each instruction, negotiates one common block geometry (picked with the
+:mod:`~repro.core.burst_model` burst-efficiency law, bounded by the VMEM
+budget check in :class:`~repro.core.stream.StreamConfig`), and emits a
+single ``pallas_call`` whose kernel runs the stage bodies back to back,
+threading intermediates through VMEM scratch refs instead of HBM.
+
+Chaining rule (the "register bypass network"):
+  * stage *i*'s vector outputs feed the FIRST ``n_vec_out`` vector inputs
+    of stage *i+1*;
+  * every remaining vector input, and every scalar input, comes from the
+    program's external operand list.
+
+External operand order (user-facing): for each stage in chain order, its
+scalar operands then its non-chained vector operands. E.g.
+``fuse("c0_scale", "c0_add")`` is called as ``fused(s, x, b)`` and computes
+``add(scale(s, x), b)``.
+
+The merged external operand list is the fused program's "encoding": it is
+validated against the widened P'-type budget in :mod:`repro.core.isa` at
+``fuse()`` time (per-stage I'/S' limits were already enforced when each
+instruction registered).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .burst_model import BurstModel, TPU_V5E_HBM
+from .stream import (LANES, VMEM_BYTES, StreamConfig, _bits,
+                     flatten_to_blocks, round_up)
+from .template import Stage, emit_stage
+
+# Candidate fused block widths (lanes-aligned powers of two). The burst
+# model picks among these: wide enough to amortise DMA issue overhead
+# (paper §3.1.2: very wide LLC blocks), small enough for the VMEM budget
+# (paper §3.1.3: BRAM capacity).
+_BLOCK_COL_CANDIDATES = tuple(LANES * (1 << k) for k in range(7))
+
+
+class Program:
+    """A chain of Stages compiled to one pallas_call.
+
+    Parameters
+    ----------
+    stages: the per-instruction Stages, in dataflow order.
+    name:   display name ("c0_scale+c0_add").
+    model:  burst model used to negotiate the fused block size.
+    vmem_budget: VMEM capacity bound for resident operand blocks.
+    """
+
+    def __init__(self, stages: Sequence[Stage], name: Optional[str] = None,
+                 model: BurstModel = TPU_V5E_HBM,
+                 vmem_budget: int = VMEM_BYTES):
+        stages = tuple(stages)
+        if not stages:
+            raise ValueError("a Program needs at least one stage")
+        self.stages = stages
+        self.name = name or "+".join(st.name for st in stages)
+        self.model = model
+        self.vmem_budget = vmem_budget
+
+        # -- chain validation (raises at fuse() time) ----------------------
+        self._n_chained = [0]
+        self._n_ext = [stages[0].n_vec_in]
+        for prev, st in zip(stages, stages[1:]):
+            if not prev.shape_preserving:
+                raise ValueError(
+                    f"{self.name}: stage {prev.name!r} has shape-changing "
+                    f"outputs and cannot feed a chained stage")
+            if prev.n_vec_out > st.n_vec_in:
+                raise ValueError(
+                    f"{self.name}: stage {prev.name!r} produces "
+                    f"{prev.n_vec_out} vector outputs but {st.name!r} "
+                    f"accepts only {st.n_vec_in} vector inputs")
+            self._n_chained.append(prev.n_vec_out)
+            self._n_ext.append(st.n_vec_in - prev.n_vec_out)
+        if len(stages) > 1 and not stages[-1].shape_preserving:
+            raise ValueError(
+                f"{self.name}: shape-changing final stage "
+                f"{stages[-1].name!r} is only supported in single-stage "
+                f"programs")
+
+    # -- merged operand list ------------------------------------------------
+    @property
+    def n_scalar_in(self) -> int:
+        return sum(st.n_scalar_in for st in self.stages)
+
+    @property
+    def n_ext_vec_in(self) -> int:
+        return sum(self._n_ext)
+
+    @property
+    def n_vec_out(self) -> int:
+        return self.stages[-1].n_vec_out
+
+    @property
+    def n_intermediates(self) -> int:
+        return sum(st.n_vec_out for st in self.stages[:-1])
+
+    @property
+    def n_inputs(self) -> int:
+        return self.n_scalar_in + self.n_ext_vec_in
+
+    def pipeline_depth(self) -> int:
+        """Chained latency: grid steps before the first fused block lands."""
+        return sum(st.pipeline_depth() for st in self.stages)
+
+    def split_operands(self, operands):
+        """User-order flat operands → per-stage (scalars, ext_vectors).
+
+        The single place the external operand convention is defined; ref
+        composition (isa.FusedProgram) and the kernel path both use it, so
+        they cannot disagree.
+        """
+        if len(operands) != self.n_inputs:
+            raise TypeError(
+                f"{self.name}: expected {self.n_inputs} operands "
+                f"({self.n_scalar_in} scalar + {self.n_ext_vec_in} vector, "
+                f"per-stage order), got {len(operands)}")
+        out, i = [], 0
+        for st, ne in zip(self.stages, self._n_ext):
+            sc = tuple(operands[i:i + st.n_scalar_in])
+            i += st.n_scalar_in
+            ext = tuple(operands[i:i + ne])
+            i += ne
+            out.append((sc, ext))
+        return out
+
+    # -- cost model (roofline inputs) ---------------------------------------
+    def flops(self, n_elems: int) -> float:
+        return float(n_elems) * sum(st.cost_flops_per_elem
+                                    for st in self.stages)
+
+    def hbm_bytes_fused(self, n_elems: int, dtype) -> int:
+        """HBM traffic of THIS program: externals + final outputs only."""
+        return (self.n_ext_vec_in + self.n_vec_out) * n_elems * _bits(dtype) // 8
+
+    def hbm_bytes_unfused(self, n_elems: int, dtype) -> int:
+        """HBM traffic of the same chain as N separate pallas_calls: every
+        stage re-reads its inputs from and spills its outputs to HBM."""
+        per_elem = sum(st.n_vec_in + st.n_vec_out for st in self.stages)
+        return per_elem * n_elems * _bits(dtype) // 8
+
+    # -- geometry negotiation ----------------------------------------------
+    def negotiate_geometry(self, n_elems: int, dtype):
+        """Pick one (block_rows, block_cols) for the whole fused region.
+
+        block_rows is the lcm of the stage row granularities. block_cols is
+        chosen by the burst model: the candidate minimising modeled DMA
+        time for the program's total streamed bytes (wider blocks amortise
+        issue overhead; padding waste and the VMEM budget push back — the
+        paper's Fig. 3 trade-off at TPU scale). Returns
+        (block_rows, block_cols, StreamConfig).
+        """
+        block_rows = 1
+        for st in self.stages:
+            block_rows = math.lcm(block_rows, st.block_rows)
+        bits = _bits(dtype)
+        # resident per grid step: external ins + outs + VMEM intermediates
+        # and carries (the fused region's whole operand footprint).
+        n_resident = (self.n_ext_vec_in + self.n_vec_out
+                      + self.n_intermediates
+                      + sum(1 for st in self.stages if st.carry_cols))
+        n_io = self.n_ext_vec_in + self.n_vec_out
+
+        candidates = sorted(set(_BLOCK_COL_CANDIDATES)
+                            | {st.block_cols for st in self.stages})
+        best = None
+        for bc in candidates:
+            block_elems = block_rows * bc
+            cfg = StreamConfig(vlen_bits=LANES * bits,
+                               block_bits=block_elems * bits)
+            try:
+                cfg.check_vmem_budget(n_resident, dtype,
+                                      budget=self.vmem_budget)
+            except ValueError:
+                continue
+            padded = round_up(max(n_elems, 1), block_elems)
+            t = n_io * self.model.time_for(padded * bits / 8,
+                                           block_elems * bits / 8)
+            if best is None or t < best[0]:
+                best = (t, bc, cfg)
+        if best is None:
+            raise ValueError(
+                f"{self.name}: no block geometry fits {n_resident} resident "
+                f"operands in the {self.vmem_budget}-byte VMEM budget")
+        _, bc, cfg = best
+        return block_rows, bc, cfg
+
+    # -- kernel emission ----------------------------------------------------
+    def _fused_kernel(self, block_rows: int, block_cols: int):
+        """Build the single kernel running all stage bodies back to back."""
+        stages, n_ext = self.stages, self._n_ext
+        ns, nv, no = self.n_scalar_in, self.n_ext_vec_in, self.n_vec_out
+        n_inter = self.n_intermediates
+
+        def kernel(*refs):
+            scalar_refs = refs[:ns]
+            vec_refs = refs[ns:ns + nv]
+            out_refs = refs[ns + nv:ns + nv + no]
+            scratch = refs[ns + nv + no:]
+            inter_refs = scratch[:n_inter]
+            carry_refs = scratch[n_inter:]
+            step = pl.program_id(1)
+
+            prev_outs: tuple = ()
+            si = vi = ii = ci = 0
+            for k, st in enumerate(stages):
+                sc = scalar_refs[si:si + st.n_scalar_in]
+                si += st.n_scalar_in
+                ext = vec_refs[vi:vi + n_ext[k]]
+                vi += n_ext[k]
+                ins = tuple(prev_outs) + tuple(ext)
+                if k < len(stages) - 1:
+                    outs = inter_refs[ii:ii + st.n_vec_out]
+                    ii += st.n_vec_out
+                else:
+                    outs = out_refs
+                carry = None
+                if st.carry_cols:
+                    carry = carry_refs[ci]
+                    ci += 1
+                emit_stage(st, sc, ins, outs, carry, step)
+                prev_outs = outs
+
+        kernel.__name__ = f"{self.name.replace('+', '_')}_kernel"
+        return kernel
+
+    def call_blocks(self, *operands, block_rows: Optional[int] = None,
+                    block_cols: Optional[int] = None,
+                    interpret: bool = False):
+        """Launch on pre-normalised 2D operands (the strict template path).
+
+        Vector operands must already be (rows, cols) with rows/cols
+        divisible by the block geometry; defaults to the stages' declared
+        geometry (single stage: exactly the old KernelTemplate behaviour).
+        """
+        stages = self.stages
+        last = stages[-1]
+        if block_rows is None:
+            block_rows = max(st.block_rows for st in stages)
+        if block_cols is None:
+            block_cols = max(st.block_cols for st in stages)
+
+        per_stage = self.split_operands(operands)
+        scalars = tuple(s for sc, _ in per_stage for s in sc)
+        vectors = tuple(v for _, ext in per_stage for v in ext)
+        for v in vectors:
+            if v.ndim != 2:
+                raise ValueError(f"{self.name}: vector operands must be 2D "
+                                 f"(rows, cols); got shape {v.shape}")
+        rows, cols = vectors[0].shape
+        if len(stages) > 1:
+            for v in vectors[1:]:
+                if v.shape != (rows, cols):
+                    raise ValueError(
+                        f"{self.name}: fused operands must agree on shape; "
+                        f"got {v.shape} vs {(rows, cols)}")
+        if rows % block_rows or cols % block_cols:
+            raise ValueError(
+                f"{self.name}: operand shape {(rows, cols)} not divisible by "
+                f"block ({block_rows}, {block_cols}); pad upstream")
+        grid = (rows // block_rows, cols // block_cols)
+
+        if last.out_shapes is not None:
+            out_shape = tuple(last.out_shapes(*vectors))
+        else:
+            out_shape = tuple(
+                jax.ShapeDtypeStruct(vectors[0].shape, vectors[0].dtype)
+                for _ in range(last.n_vec_out))
+
+        blockspec = pl.BlockSpec((block_rows, block_cols),
+                                 lambda r, c: (r, c))
+        in_specs = ([pl.BlockSpec(memory_space=pltpu.SMEM)] * len(scalars)
+                    + [blockspec] * len(vectors))
+        out_specs = tuple(
+            pl.BlockSpec(
+                (block_rows,
+                 block_cols * s.shape[1] // cols if cols else block_cols),
+                lambda r, c: (r, c))
+            for s in out_shape)
+        scratch: list = []
+        # intermediates: chained values live in VMEM, never touching HBM.
+        for st in stages[:-1]:
+            scratch.extend(
+                pltpu.VMEM((block_rows, block_cols), vectors[0].dtype)
+                for _ in range(st.n_vec_out))
+        for st in stages:
+            if st.carry_cols:
+                scratch.append(pltpu.VMEM((block_rows, st.carry_cols),
+                                          st.carry_dtype))
+
+        compiler_params = None
+        if not interpret:
+            cp_cls = (getattr(pltpu, "CompilerParams", None)
+                      or getattr(pltpu, "TPUCompilerParams"))
+            # rows are independent ("parallel"); cols carry state in order.
+            compiler_params = cp_cls(
+                dimension_semantics=("parallel", "arbitrary"))
+
+        fn = pl.pallas_call(
+            self._fused_kernel(block_rows, block_cols),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs if len(out_shape) > 1 else out_specs[0],
+            out_shape=out_shape if len(out_shape) > 1 else out_shape[0],
+            scratch_shapes=scratch,
+            interpret=interpret,
+            compiler_params=compiler_params,
+        )
+        scalars = tuple(jnp.asarray(s).reshape(-1) for s in scalars)
+        return fn(*scalars, *vectors)
+
+    def _check_vectors(self, per_stage):
+        """Validate external vector operand consistency: identical shapes
+        and dtypes. Identical SHAPES (not just sizes) so ref-mode oracle
+        composition (which runs on the original shapes, where numpy
+        broadcasting would silently diverge) and the flattened kernel path
+        accept exactly the same operand lists. Returns the external
+        vectors in program order."""
+        flat_vecs = [v for _, ext in per_stage for v in ext]
+        if not flat_vecs:
+            raise TypeError(f"{self.name}: a program needs at least one "
+                            f"vector operand")
+        shape = jnp.shape(flat_vecs[0])
+        dtype = jnp.result_type(flat_vecs[0])
+        for v in flat_vecs[1:]:
+            if jnp.shape(v) != shape:
+                raise ValueError(
+                    f"{self.name}: fused vector operands must agree on "
+                    f"shape; got {jnp.shape(v)} vs {shape}")
+            if jnp.result_type(v) != dtype:
+                raise ValueError(
+                    f"{self.name}: fused vector operands must share a "
+                    f"dtype; got {jnp.result_type(v)} vs {dtype}")
+        return flat_vecs
+
+    def check_vector_operands(self, operands):
+        return self._check_vectors(self.split_operands(operands))
+
+    # ------------------------------------------------------------------
+    def __call__(self, *operands, interpret: bool = False):
+        """The shared streaming entry path: normalise arbitrary-shaped
+        vector operands to padded 2D blocks, negotiate the fused geometry,
+        launch the single pallas_call, restore the caller's shapes."""
+        per_stage = self.split_operands(operands)
+        flat_vecs = self._check_vectors(per_stage)
+        ref_v = flat_vecs[0]
+        n = ref_v.size
+
+        block_rows, block_cols, _ = self.negotiate_geometry(n, ref_v.dtype)
+        norm = []
+        for sc, ext in per_stage:
+            norm.extend(sc)
+            norm.extend(flatten_to_blocks(v, block_cols, block_rows)[0]
+                        for v in ext)
+        out = self.call_blocks(*norm, block_rows=block_rows,
+                               block_cols=block_cols, interpret=interpret)
+        outs = out if isinstance(out, (tuple, list)) else (out,)
+        outs = tuple(o.reshape(-1)[:n].reshape(ref_v.shape) for o in outs)
+        return outs[0] if len(outs) == 1 else outs

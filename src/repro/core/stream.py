@@ -107,6 +107,52 @@ def round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+# -- shared operand shape normalisation --------------------------------------
+# One entry path for every streaming op and fused program: kernels see 2D
+# (rows, cols) tiles whose geometry satisfies the block constraints; callers
+# keep arbitrary shapes. (Previously duplicated per-op in kernels/ops.py and
+# kernels/stream_copy.py.)
+
+def as_rows(x, cols: int):
+    """Collapse all leading axes; last axis stays the vector axis.
+
+    Returns (x2d, lead_shape) so callers can restore the original shape.
+    """
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    return x.reshape(rows, cols), lead
+
+
+def pad_rows(x2d, mult: int = SUBLANES):
+    """Zero-pad rows up to the sublane granularity; returns (padded, n_rows)."""
+    import jax.numpy as jnp
+    r = x2d.shape[0]
+    pad = (-r) % mult
+    if pad:
+        x2d = jnp.concatenate(
+            [x2d, jnp.zeros((pad, x2d.shape[1]), x2d.dtype)], 0)
+    return x2d, r
+
+
+def flatten_to_blocks(x, block_cols: int, block_rows: int = SUBLANES):
+    """Flatten to (rows, block_cols), padded to whole (block_rows, block_cols)
+    tiles; returns (x2d, n_valid_elems). The streaming-op entry path: a fused
+    program and every c0 instruction normalise operands through here."""
+    import jax.numpy as jnp
+    n = x.size
+    cols = block_cols
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    rpad = (-rows) % block_rows
+    if rpad:
+        flat = jnp.pad(flat, (0, rpad * cols))
+        rows += rpad
+    return flat.reshape(rows, cols), n
+
+
 def pad_vocab(vocab: int, mult: int = 256) -> int:
     """Pad embedding-table rows so the vocab dim shards over any axis ≤ mult.
 

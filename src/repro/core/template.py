@@ -13,13 +13,21 @@ paper's "stateful instruction" discussion in §6: our carry lives in VMEM
 scratch, re-initialised at grid step 0, exactly the softcore's
 internal-state registers).
 
+A template is no longer only a monolithic ``__call__``: it exposes its
+body and block geometry as a composable :class:`Stage`, and launching a
+template is just running the single-stage :class:`repro.core.program.
+Program`. Multi-stage programs chain several registered instructions into
+ONE ``pallas_call`` (see ``core/program.py`` and DESIGN.md §4), threading
+intermediates through VMEM scratch instead of HBM.
+
 Template guarantees, mirroring the paper's:
   * back-to-back calls pipeline: the grid's minor dimension streams blocks
     while the next HBM→VMEM DMA ("burst", §3.1.2-3) is in flight;
   * full-block outputs never read-modify-write (§3.1.1 write-allocate
     elision);
   * the operand count is bounded by the I'/S' encoding (checked by
-    :class:`repro.core.isa.OperandSpec` at registration).
+    :class:`repro.core.isa.OperandSpec` at registration); a fused program
+    is checked against the widened P'-type budget at ``fuse()`` time.
 """
 from __future__ import annotations
 
@@ -30,9 +38,62 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from .stream import LANES, StreamConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One composable pipeline stage: a block body plus its geometry.
+
+    This is the unit of fusion: a :class:`KernelTemplate` yields exactly
+    one Stage (via :meth:`KernelTemplate.stage`), and a
+    :class:`repro.core.program.Program` chains several Stages into a
+    single ``pallas_call`` whose kernel runs the bodies back to back on
+    VMEM-resident blocks.
+
+    body signature (identical to the template contract):
+        body(scalar_refs, in_refs, out_refs, carry_ref, step)
+    """
+
+    name: str
+    body: Callable[..., None]
+    n_scalar_in: int = 0
+    n_vec_in: int = 1
+    n_vec_out: int = 1
+    block_rows: int = 8
+    block_cols: int = LANES
+    carry_cols: int = 0
+    carry_dtype: Any = jnp.float32
+    carry_init: float = 0.0
+    cost_flops_per_elem: float = 1.0
+    # Non-None only on single-stage programs (shape-changing outputs can't
+    # feed a chained stage's input block).
+    out_shapes: Optional[Callable[..., Sequence[jax.ShapeDtypeStruct]]] = None
+
+    def pipeline_depth(self) -> int:
+        """Grid steps before the first output block lands (c*_cycles)."""
+        return 1 if self.carry_cols == 0 else 2
+
+    @property
+    def shape_preserving(self) -> bool:
+        """True iff every output block has the input block's geometry —
+        the precondition for this stage to sit anywhere in a fused chain."""
+        return self.out_shapes is None
+
+
+def emit_stage(stage: Stage, scalar_refs, in_refs, out_refs, carry_ref,
+               step) -> None:
+    """Run one stage body inside a kernel, handling carry initialisation.
+
+    Shared between the single-template launch path and fused programs, so
+    carried-state semantics (re-init at grid step 0) are identical in both.
+    """
+    if carry_ref is not None:
+        @pl.when(step == 0)
+        def _init():
+            carry_ref[...] = jnp.full_like(carry_ref[...], stage.carry_init)
+    stage.body(scalar_refs, in_refs, out_refs, carry_ref, step)
 
 
 @dataclasses.dataclass
@@ -67,85 +128,28 @@ class KernelTemplate:
 
     def pipeline_depth(self) -> int:
         """Grid steps before the first output block lands (c*_cycles analogue)."""
-        return 1 if self.carry_cols == 0 else 2
+        return self.stage().pipeline_depth()
 
     # ------------------------------------------------------------------
-    def _wrapped_body(self):
-        tpl = self
-
-        def kernel(*refs):
-            ns, ni, no = tpl.n_scalar_in, tpl.n_vec_in, tpl.n_vec_out
-            scalar_refs = refs[:ns]
-            in_refs = refs[ns:ns + ni]
-            out_refs = refs[ns + ni:ns + ni + no]
-            carry_ref = refs[ns + ni + no] if tpl.carry_cols else None
-            step = pl.program_id(1)
-            if carry_ref is not None:
-                @pl.when(step == 0)
-                def _init():
-                    carry_ref[...] = jnp.full_like(
-                        carry_ref[...], tpl.carry_init)
-            tpl.body(scalar_refs, in_refs, out_refs, carry_ref, step)
-
-        kernel.__name__ = f"{self.name}_kernel"
-        return kernel
+    def stage(self) -> Stage:
+        """This template's body + geometry as a composable fusion stage."""
+        return Stage(
+            name=self.name, body=self.body,
+            n_scalar_in=self.n_scalar_in, n_vec_in=self.n_vec_in,
+            n_vec_out=self.n_vec_out,
+            block_rows=self.block_rows, block_cols=self.block_cols,
+            carry_cols=self.carry_cols, carry_dtype=self.carry_dtype,
+            carry_init=self.carry_init,
+            cost_flops_per_elem=self.cost_flops_per_elem,
+            out_shapes=self.out_shapes)
 
     # ------------------------------------------------------------------
     def __call__(self, *operands, interpret: bool = False):
-        ns, ni, no = self.n_scalar_in, self.n_vec_in, self.n_vec_out
-        if len(operands) != ns + ni:
-            raise TypeError(f"{self.name}: expected {ns} scalar + {ni} vector "
-                            f"operands, got {len(operands)}")
-        scalars = operands[:ns]
-        vectors = operands[ns:]
-        for v in vectors:
-            if v.ndim != 2:
-                raise ValueError(f"{self.name}: vector operands must be 2D "
-                                 f"(rows, cols); got shape {v.shape}")
-        rows, cols = vectors[0].shape
-        if rows % self.block_rows or cols % self.block_cols:
-            raise ValueError(
-                f"{self.name}: operand shape {(rows, cols)} not divisible by "
-                f"block ({self.block_rows}, {self.block_cols}); pad upstream")
-        grid = (rows // self.block_rows, cols // self.block_cols)
-
-        if self.out_shapes is not None:
-            out_shape = tuple(self.out_shapes(*vectors))
-        else:
-            out_shape = tuple(
-                jax.ShapeDtypeStruct(vectors[0].shape, vectors[0].dtype)
-                for _ in range(no))
-
-        blockspec = pl.BlockSpec((self.block_rows, self.block_cols),
-                                 lambda r, c: (r, c))
-        in_specs = ([pl.BlockSpec(memory_space=pltpu.SMEM)] * ns
-                    + [blockspec] * ni)
-        out_specs = tuple(
-            pl.BlockSpec(
-                (self.block_rows,
-                 self.block_cols * s.shape[1] // cols if cols else self.block_cols),
-                lambda r, c: (r, c))
-            for s in out_shape)
-        scratch = ([pltpu.VMEM((self.block_rows, self.carry_cols),
-                               self.carry_dtype)]
-                   if self.carry_cols else [])
-
-        fn = pl.pallas_call(
-            self._wrapped_body(),
-            grid=grid,
-            in_specs=in_specs,
-            out_specs=out_specs if len(out_shape) > 1 else out_specs[0],
-            out_shape=out_shape if len(out_shape) > 1 else out_shape[0],
-            scratch_shapes=scratch,
-            interpret=interpret,
-            # rows are independent ("parallel"); cols carry state in order.
-            compiler_params=pltpu.CompilerParams(
-                dimension_semantics=("parallel", "arbitrary"),
-            ) if not interpret else None,
-        )
-        scalars = tuple(jnp.asarray(s).reshape(-1) for s in scalars)
-        out = fn(*scalars, *vectors)
-        return out
+        # A template launch IS the single-stage program: one stage, the
+        # template's own block geometry, one pallas_call.
+        from .program import Program    # deferred: program imports template
+        prog = Program((self.stage(),), name=self.name)
+        return prog.call_blocks(*operands, interpret=interpret)
 
     # ------------------------------------------------------------------
     def reference(self, ref_fn: Callable) -> Callable:

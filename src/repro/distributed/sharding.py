@@ -28,6 +28,24 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 Candidate = Optional[tuple]
 Rules = dict[str, Sequence[Candidate]]
 
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` across jax versions.
+
+    jax ≥ 0.6 exposes ``jax.shard_map`` with a ``check_vma`` kwarg; on
+    0.4.x the API lives at ``jax.experimental.shard_map.shard_map`` and the
+    kwarg is named ``check_rep``. Every shard_map in this repo (and in the
+    subprocess test bodies) goes through this shim.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+
 DEFAULT_RULES: Rules = {
     # -- activations ---------------------------------------------------------
     "batch":      [("pod", "data"), ("data",), None],

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from repro.core import isa
 from repro.core.isa import Instruction, OperandSpec
 from repro.core.stream import StreamConfig
+# Shared operand shape normalisation — one entry path for every op (was
+# duplicated here and in stream_copy.py; see core/stream.py).
+from repro.core.stream import as_rows as _as_rows
+from repro.core.stream import pad_rows as _pad_rows
 
 from . import flashattn as _fa
 from . import prefix_scan as _ps
@@ -28,23 +32,6 @@ from . import ref
 from . import sortnet as _sn
 from . import stream_copy as _sc
 from . import topk as _tk
-
-
-def _as_rows(x: jax.Array, cols: int):
-    """Collapse all leading axes; last axis stays the vector axis."""
-    lead = x.shape[:-1]
-    rows = 1
-    for s in lead:
-        rows *= s
-    return x.reshape(rows, cols), lead
-
-
-def _pad_rows(x2d: jax.Array, mult: int = 8):
-    r = x2d.shape[0]
-    pad = (-r) % mult
-    if pad:
-        x2d = jnp.concatenate([x2d, jnp.zeros((pad, x2d.shape[1]), x2d.dtype)], 0)
-    return x2d, r
 
 
 # ---------------------------------------------------------------------------
@@ -208,10 +195,13 @@ def chunk_scan_state(a, b, axis: int = 1, mode=None):
 # S'-type: the paper's two scalar sources are the base address + loop index;
 # in a dataflow compiler addressing is the BlockSpec index map, so the
 # dispatch signature carries only the vector operand.
+# Every template-backed op registers its KernelTemplate so Registry.fuse
+# can chain its Stage into a single-pallas_call fused program.
 isa.register(Instruction(
     name="c0_copy", spec=OperandSpec(itype="S'", scalar_in=0, vector_in=1,
                                      vector_out=1),
     ref=ref.stream_copy, kernel=_sc.stream_copy_pallas, pipeline_depth=1,
+    template=_sc.COPY,
     doc="c0_lv + c0_sv: streaming vector move (memcpy building block); "
         "S'-type rs1/rs2 (base+index) become the BlockSpec index map"))
 
@@ -219,18 +209,18 @@ isa.register(Instruction(
     name="c0_scale", spec=OperandSpec(itype="I'", scalar_in=1, vector_in=1,
                                       vector_out=1),
     ref=ref.stream_scale, kernel=_sc.stream_scale_pallas, pipeline_depth=1,
-    doc="STREAM Scale"))
+    template=_sc.SCALE, doc="STREAM Scale"))
 
 isa.register(Instruction(
     name="c0_add", spec=OperandSpec(itype="I'", vector_in=2, vector_out=1),
     ref=ref.stream_add, kernel=_sc.stream_add_pallas, pipeline_depth=1,
-    doc="STREAM Add"))
+    template=_sc.ADD, doc="STREAM Add"))
 
 isa.register(Instruction(
     name="c0_triad", spec=OperandSpec(itype="I'", scalar_in=1, vector_in=2,
                                       vector_out=1),
     ref=ref.stream_triad, kernel=_sc.stream_triad_pallas, pipeline_depth=1,
-    doc="STREAM Triad"))
+    template=_sc.TRIAD, doc="STREAM Triad"))
 
 
 def stream_copy(x, mode=None):

@@ -7,7 +7,10 @@ the paper's design-space-exploration workload (Fig. 3).
 
 All four are built from :class:`repro.core.template.KernelTemplate`, i.e.
 they are literally "a few user lines inside the provided template", which
-is the paper's usability claim (§2.2).
+is the paper's usability claim (§2.2). Each template also exposes its body
+as a composable :class:`~repro.core.template.Stage`, so the c0 family can
+be chained into fused programs (``isa.fuse("c0_scale", "c0_add")``) that
+run as ONE pallas_call (see ``core/program.py``).
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.stream import LANES, StreamConfig
+from repro.core.stream import LANES, StreamConfig, flatten_to_blocks
 from repro.core.template import KernelTemplate
 
 
@@ -40,62 +43,48 @@ def _triad_body(scalars, ins, outs, carry, step):
     outs[0][...] = ins[0][...] + scalars[0][0] * ins[1][...]
 
 
-def _template(name, body, *, n_scalar_in=0, n_vec_in=1,
+def _template(name, body, *, n_scalar_in=0, n_vec_in=1, flops=1.0,
               stream: StreamConfig | None = None) -> KernelTemplate:
     stream = stream or StreamConfig()
     block_cols = min(stream.block_elems(jnp.float32) // 8, 8 * LANES)
     return KernelTemplate(
         name=name, body=body, n_scalar_in=n_scalar_in, n_vec_in=n_vec_in,
-        n_vec_out=1, block_rows=8, block_cols=max(LANES, block_cols))
+        n_vec_out=1, block_rows=8, block_cols=max(LANES, block_cols),
+        cost_flops_per_elem=flops)
 
 
-COPY = _template("c0_copy", _copy_body)
-SCALE = _template("c0_scale", _scale_body, n_scalar_in=1)
-ADD = _template("c0_add", _add_body, n_vec_in=2)
-TRIAD = _template("c0_triad", _triad_body, n_scalar_in=1, n_vec_in=2)
-
-
-def _as2d(x: jax.Array, block_cols: int):
-    """Flatten to (rows, block_cols) for streaming; pad to a whole block."""
-    n = x.size
-    cols = block_cols
-    rows = -(-n // cols)
-    pad = rows * cols - n
-    flat = jnp.pad(x.reshape(-1), (0, pad))
-    # round rows up to the row-block granularity
-    rb = 8
-    rpad = (-rows) % rb
-    if rpad:
-        flat = jnp.pad(flat, (0, rpad * cols))
-        rows += rpad
-    return flat.reshape(rows, cols), n
+COPY = _template("c0_copy", _copy_body, flops=0.0)
+SCALE = _template("c0_scale", _scale_body, n_scalar_in=1, flops=1.0)
+ADD = _template("c0_add", _add_body, n_vec_in=2, flops=1.0)
+TRIAD = _template("c0_triad", _triad_body, n_scalar_in=1, n_vec_in=2,
+                  flops=2.0)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def stream_copy_pallas(x: jax.Array, *, interpret: bool = False) -> jax.Array:
-    y2d, n = _as2d(x, COPY.block_cols)
+    y2d, n = flatten_to_blocks(x, COPY.block_cols)
     out = COPY(y2d, interpret=interpret)
     return out.reshape(-1)[:n].reshape(x.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def stream_scale_pallas(x: jax.Array, s, *, interpret: bool = False) -> jax.Array:
-    y2d, n = _as2d(x, SCALE.block_cols)
+    y2d, n = flatten_to_blocks(x, SCALE.block_cols)
     out = SCALE(jnp.asarray(s, x.dtype), y2d, interpret=interpret)
     return out.reshape(-1)[:n].reshape(x.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def stream_add_pallas(a: jax.Array, b: jax.Array, *, interpret: bool = False) -> jax.Array:
-    a2, n = _as2d(a, ADD.block_cols)
-    b2, _ = _as2d(b, ADD.block_cols)
+    a2, n = flatten_to_blocks(a, ADD.block_cols)
+    b2, _ = flatten_to_blocks(b, ADD.block_cols)
     out = ADD(a2, b2, interpret=interpret)
     return out.reshape(-1)[:n].reshape(a.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def stream_triad_pallas(a: jax.Array, b: jax.Array, s, *, interpret: bool = False) -> jax.Array:
-    a2, n = _as2d(a, TRIAD.block_cols)
-    b2, _ = _as2d(b, TRIAD.block_cols)
+    a2, n = flatten_to_blocks(a, TRIAD.block_cols)
+    b2, _ = flatten_to_blocks(b, TRIAD.block_cols)
     out = TRIAD(jnp.asarray(s, a.dtype), a2, b2, interpret=interpret)
     return out.reshape(-1)[:n].reshape(a.shape)

@@ -27,8 +27,8 @@ import jax
 
 
 def _costs(compiled):
-    from repro.roofline.analysis import collective_bytes
-    ca = compiled.cost_analysis() or {}
+    from repro.roofline.analysis import collective_bytes, normalize_cost_analysis
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     cb = collective_bytes(compiled.as_text())
     return (float(ca.get("flops", 0.0)),
             float(ca.get("bytes accessed", 0.0)), cb["total"])

@@ -26,7 +26,7 @@ from repro.checkpoint.ckpt import latest_step
 from repro.configs import SHAPES, get_config
 from repro.data import SyntheticLMData, TokenFileData, make_global_batch
 from repro.distributed.collectives import compressed_ring_allreduce
-from repro.distributed.sharding import tree_shardings
+from repro.distributed.sharding import shard_map, tree_shardings
 from repro.launch import api
 from repro.launch.mesh import make_elastic_mesh, mesh_name
 
@@ -46,7 +46,7 @@ def make_pod_sync(mesh):
     spec = P()  # params replicated over pod in-spec handled per-leaf below
 
     def sync(params):
-        return jax.shard_map(
+        return shard_map(
             avg, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: spec, params),),
             out_specs=jax.tree.map(lambda _: spec, params),

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import _current_mesh
+from repro.distributed.sharding import _current_mesh, shard_map
 from repro.kernels import ops as kops
 
 
@@ -176,7 +176,7 @@ def _moe_sharded(cfg: ModelConfig, p: dict, x: jax.Array, mesh,
                                          tp_axis, n_ep)
         return out.reshape(b_l, s, d), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_axes if batch_axes else None, None, None), wspecs),
         out_specs=(P(batch_axes if batch_axes else None, None, None), P()),

@@ -47,6 +47,14 @@ _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 
 
+def normalize_cost_analysis(ca) -> dict:
+    """compiled.cost_analysis() → dict across jax versions (older jax
+    returns a single-element list of per-module dicts)."""
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _shape_bytes(type_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(type_str):
@@ -120,6 +128,41 @@ def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
     return terms
 
 
+def fusion_report(flops: float, fused_bytes: float, unfused_bytes: float,
+                  hw: dict = HW_V5E) -> dict:
+    """Roofline terms for a fused instruction program vs its unfused chain.
+
+    A fused N-stage program does N stages of flops per external byte moved
+    (intermediates stay in VMEM), so its arithmetic intensity rises by
+    ``unfused_bytes / fused_bytes`` while flops are unchanged — the same
+    flops against less HBM traffic. The returned ``speedup_bound`` is the
+    ratio of roofline step-time lower bounds (≥ 1 when memory-bound, → 1
+    as the chain becomes compute-bound and fusion stops paying).
+    """
+    fused = roofline_terms(flops, fused_bytes, 0.0, hw)
+    unfused = roofline_terms(flops, unfused_bytes, 0.0, hw)
+    bound_f = fused["step_time_lower_bound_s"]
+    bound_u = unfused["step_time_lower_bound_s"]
+    return {
+        "fused": fused,
+        "unfused": unfused,
+        "bytes_reduction": (unfused_bytes / fused_bytes
+                            if fused_bytes else float("inf")),
+        "intensity_fused": flops / fused_bytes if fused_bytes else float("inf"),
+        "intensity_unfused": (flops / unfused_bytes
+                              if unfused_bytes else float("inf")),
+        "speedup_bound": bound_u / bound_f if bound_f else float("inf"),
+    }
+
+
+def program_fusion_report(program, n_elems: int, dtype,
+                          hw: dict = HW_V5E) -> dict:
+    """fusion_report for a :class:`repro.core.program.Program` instance."""
+    return fusion_report(program.flops(n_elems),
+                         program.hbm_bytes_fused(n_elems, dtype),
+                         program.hbm_bytes_unfused(n_elems, dtype), hw)
+
+
 @dataclasses.dataclass
 class CellReport:
     arch: str
@@ -142,7 +185,7 @@ class CellReport:
 def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      n_chips: int, model_flops: float,
                      hw: dict = HW_V5E) -> CellReport:
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     flops = float(ca.get("flops", 0.0))
     hbm = float(ca.get("bytes accessed", 0.0))
     txt = compiled.as_text()

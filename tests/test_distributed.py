@@ -31,12 +31,13 @@ def test_compressed_ring_allreduce_matches_psum():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import compressed_ring_allreduce
+        from repro.distributed.sharding import shard_map
         mesh = jax.make_mesh((8,), ("d",))
         x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 4096)),
                         jnp.float32)
         def body(xl):
             return compressed_ring_allreduce(xl, "d"), jax.lax.psum(xl, "d")
-        got, want = jax.jit(jax.shard_map(
+        got, want = jax.jit(shard_map(
             body, mesh=mesh, in_specs=P("d"), out_specs=(P("d"), P("d")),
             check_vma=False))(x)
         err = float(jnp.max(jnp.abs(got - want)))
@@ -77,6 +78,7 @@ def test_gpipe_forward_matches_sequential():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.pipeline import gpipe_forward
+        from repro.distributed.sharding import shard_map
         mesh = jax.make_mesh((4,), ("stage",))
         S, M, D = 4, 6, 16
         rng = np.random.default_rng(0)
@@ -88,7 +90,7 @@ def test_gpipe_forward_matches_sequential():
         def run(w_all, mbs):
             out = gpipe_forward(stage, w_all, mbs, "stage", S)
             return jax.lax.psum(out, "stage")  # valid only on last stage
-        got = jax.jit(jax.shard_map(run, mesh=mesh,
+        got = jax.jit(shard_map(run, mesh=mesh,
             in_specs=(P("stage"), P()), out_specs=P(),
             check_vma=False))(w, mbs)
         want = mbs

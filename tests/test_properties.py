@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; "
+                    "property tests are exercised in CI")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.burst_model import BurstModel
