@@ -2,8 +2,11 @@
 
 On the CPU container we report (a) the analytical burst model for both
 the paper's AXI platform and the TPU-v5e target — the law the figure
-demonstrates — and (b) measured wall-clock of the jitted streaming copy
-at each block width (relative trend only).
+demonstrates — (b) measured wall-clock of the jitted streaming copy at
+each block width (relative trend only), and (c) the repro.memhier
+trace-driven simulator swept over the same LLC block sizes, gated to
+stay within 15% of the burst law at the plateau and to reproduce the
+half-peak crossover at N_1/2 (the simulator-vs-measurement check).
 """
 from __future__ import annotations
 
@@ -12,6 +15,7 @@ import numpy as np
 
 from repro.core.burst_model import PAPER_AXI, TPU_V5E_HBM
 from repro.core.stream import flatten_to_blocks
+from repro.memhier import PAPER_ULTRA96, TPU_V5E, stream_bandwidth
 
 from .common import row, time_fn
 
@@ -56,6 +60,36 @@ def main() -> None:
         t = time_fn(fn, x2d, warmup=1, iters=3)
         row(f"fig3_measured_interpret_block{bc}", t * 1e6,
             f"{x.nbytes*2/t/1e9:.2f}GB/s_cpu_interpret")
+
+    # (c) memhier simulator vs the burst law — the full-hierarchy sweep
+    # must reproduce the figure's shape, not just the one-term fit.
+    n_bytes = 1 << 20
+    for bits in (512, 1024, 2048, 4096, 8192, 16384):
+        blk = bits // 8
+        pred = stream_bandwidth(PAPER_ULTRA96.with_llc_block(blk), n_bytes)
+        law = PAPER_AXI.effective_bw(blk)
+        ratio = pred.effective_bw / law
+        row(f"fig3_memhier_paper_block{bits}b", 0.0,
+            f"{pred.effective_bw/1e9:.3f}GB/s_law{law/1e9:.3f}_"
+            f"ratio{ratio:.3f}_bneck:{pred.bottleneck}")
+        if bits >= 8192:                       # plateau region
+            assert abs(ratio - 1.0) <= 0.15, (
+                f"memhier off the Fig.3 plateau law by {ratio:.3f} at "
+                f"{bits}-bit blocks")
+    # half-peak crossover: an LLC block of N_1/2 bytes must give ~peak/2
+    half = stream_bandwidth(
+        PAPER_ULTRA96.with_llc_block(int(PAPER_AXI.n_half_bytes)), n_bytes)
+    frac = half.effective_bw / PAPER_AXI.peak_bw
+    row("fig3_memhier_paper_nhalf_crossover", 0.0,
+        f"{frac:.3f}_of_peak(expect~0.5)")
+    assert abs(frac - 0.5) <= 0.15 * 0.5, (
+        f"memhier misses the N_1/2 half-peak crossover: {frac:.3f}")
+    for kib in (32, 128, 512, 2048):
+        pred = stream_bandwidth(TPU_V5E.with_llc_block(kib * 1024), n_bytes)
+        law = TPU_V5E_HBM.effective_bw(kib * 1024)
+        row(f"fig3_memhier_v5e_block{kib}KiB", 0.0,
+            f"{pred.effective_bw/1e9:.0f}GB/s_law{law/1e9:.0f}_"
+            f"bneck:{pred.bottleneck}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,17 @@
-"""Shared benchmark utilities: timing, CSV rows."""
+"""Shared benchmark utilities: timing, CSV rows, machine-readable results."""
 from __future__ import annotations
 
 import time
 
 import jax
+
+# Every row() lands here too, so `benchmarks.run --json OUT` can dump the
+# whole run machine-readably (the BENCH_*.json perf trajectory).
+RESULTS: list[dict] = []
+
+
+def reset_results() -> None:
+    RESULTS.clear()
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -22,4 +30,6 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line)
+    RESULTS.append({"name": name, "us_per_call": us_per_call,
+                    "derived": derived})
     return line

@@ -1,25 +1,36 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json OUT]
 
-Output: ``name,us_per_call,derived`` CSV rows.
+Output: ``name,us_per_call,derived`` CSV rows on stdout; with ``--json``
+the same rows plus per-suite status land in OUT as JSON (the machine-
+readable form the BENCH_*.json perf trajectory accumulates). Exits
+non-zero when any suite fails.
+
 Roofline numbers (EXPERIMENTS.md §Roofline) come from launch/dryrun.py,
 which needs its own 512-device process — not run from here.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+from . import common
 
 
 def main() -> None:
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default=None)
+    p.add_argument("--only", default=None,
+                   help="run only suites whose name contains this substring")
+    p.add_argument("--json", default=None, metavar="OUT",
+                   help="write machine-readable results to this path")
     args = p.parse_args()
 
     from . import (bench_blocksweep, bench_core_overhead, bench_fusion,
-                   bench_opcount, bench_prefix, bench_sort, bench_stream)
+                   bench_memhier, bench_opcount, bench_prefix, bench_sort,
+                   bench_stream)
     suites = {
         "fig3_blocksweep": bench_blocksweep.main,
         "fig4_stream": bench_stream.main,
@@ -28,17 +39,33 @@ def main() -> None:
         "sec432_prefix": bench_prefix.main,
         "sec6_opcount": bench_opcount.main,
         "fusion_programs": bench_fusion.main,
+        "sec31_memhier": bench_memhier.main,
     }
+    if args.only and not any(args.only in name for name in suites):
+        print(f"--only {args.only!r} matches no suite; have "
+              f"{sorted(suites)}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
+    common.reset_results()
+    status: dict[str, str] = {}
     failed = []
     for name, fn in suites.items():
         if args.only and args.only not in name:
             continue
         try:
             fn()
+            status[name] = "ok"
         except Exception:  # noqa: BLE001
+            status[name] = "failed"
             failed.append(name)
             traceback.print_exc()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": status, "failed": failed,
+                       "results": common.RESULTS}, f, indent=1)
+        print(f"wrote {len(common.RESULTS)} results to {args.json}",
+              file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

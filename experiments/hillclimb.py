@@ -9,6 +9,16 @@ overrides; records the three roofline terms per variant.
 
 Each variant is  tag=key:val,key:val  (empty = baseline).
 Results appended to experiments/perf/<arch>_<shape>.md.
+
+Memhier mode — autotune cache-hierarchy parameters on the trace-driven
+simulator (no dry-run compile needed):
+
+    PYTHONPATH=src python experiments/hillclimb.py memhier \
+        [preset] [chainA+chainB ...]
+
+Hill-climbs (LLC block size ×2/÷2, DL1 block ×2/÷2, write-skip toggle)
+to minimise predicted time of each fused chain's trace; steps appended
+to experiments/perf/memhier_<preset>.md.
 """
 import json
 import sys
@@ -30,7 +40,96 @@ def parse_variant(spec: str):
     return tag, overrides
 
 
+def _memhier_neighbors(hier):
+    """Local moves in the hierarchy parameter space."""
+    import dataclasses
+    llc, dl1 = hier.llc, hier.dl1
+    moves = []
+    for blk in (llc.block_bytes * 2, llc.block_bytes // 2):
+        # BRAM capacity pushes back (§3.1.3): keep ≥ 4 blocks resident.
+        if (blk >= dl1.block_bytes and blk % dl1.block_bytes == 0
+                and 4 * blk <= llc.capacity_bytes):
+            moves.append((f"llc_block={blk}", hier.with_llc_block(blk)))
+    for blk in (dl1.block_bytes * 2, dl1.block_bytes // 2):
+        if 0 < blk <= llc.block_bytes and llc.block_bytes % blk == 0:
+            new_dl1 = dataclasses.replace(
+                dl1, block_bytes=blk,
+                capacity_bytes=max(dl1.capacity_bytes, 4 * blk))
+            moves.append((f"dl1_block={blk}", dataclasses.replace(
+                hier, levels=(new_dl1,) + hier.levels[1:])))
+    flipped = dataclasses.replace(
+        dl1, full_block_write_skips_fetch=not dl1.full_block_write_skips_fetch)
+    moves.append((f"dl1_write_skip={flipped.full_block_write_skips_fetch}",
+                  dataclasses.replace(hier, levels=(flipped,)
+                                      + hier.levels[1:])))
+    return moves
+
+
+def memhier_main(argv):
+    """Hill-climb hierarchy parameters on the memhier simulator."""
+    import jax.numpy as jnp
+
+    from repro.core import isa
+    import repro.kernels  # noqa: F401 — registers the ISA
+    from repro.memhier import PRESETS, simulate, trace_program
+
+    preset, chains = "paper_ultra96", list(argv)
+    if chains and chains[0] in PRESETS:
+        preset = chains.pop(0)
+    misplaced = [c for c in chains if c in PRESETS]
+    if misplaced:
+        raise SystemExit(f"preset name(s) {misplaced} must come first")
+    chains = chains or ["c0_scale+c0_add"]
+    for spec in chains:
+        unknown = [n for n in spec.split("+") if n not in isa.registry]
+        if unknown:
+            raise SystemExit(
+                f"unknown instruction(s) {unknown} in chain {spec!r}; "
+                f"presets are {sorted(PRESETS)}")
+    n_elems, dtype = 1 << 18, jnp.float32
+
+    def predicted_us(h, prog):
+        # raw simulate (not predict_program): the candidate's own LLC
+        # block must drive the burst size being tuned.
+        return simulate(h, trace_program(prog, n_elems, dtype)).time_s * 1e6
+
+    os.makedirs("experiments/perf", exist_ok=True)
+    path = f"experiments/perf/memhier_{preset}.md"
+    rows = []
+    for spec in chains:
+        prog = isa.fuse(*spec.split("+")).program
+        hier = PRESETS[preset]
+        t = predicted_us(hier, prog)
+        rows.append(f"| {spec} | start | `{preset}` | {t:.2f} |")
+        improved = True
+        while improved:
+            improved = False
+            for tag, cand in _memhier_neighbors(hier):
+                tc = predicted_us(cand, prog)
+                if tc < t * (1 - 1e-6):
+                    hier, t, improved = cand, tc, True
+                    rows.append(f"| {spec} | {tag} | accepted | {t:.2f} |")
+                    break
+        rows.append(
+            f"| {spec} | done | llc={hier.llc.block_bytes}B,"
+            f"dl1={hier.dl1.block_bytes}B | {t:.2f} |")
+    hdr = ("| chain | move | state | predicted us |\n"
+           "|---|---|---|---:|\n")
+    with open(path, "a") as f:
+        f.write(hdr + "\n".join(rows) + "\n")
+    print(hdr + "\n".join(rows))
+
+
 def main():
+    if len(sys.argv) < 2:
+        raise SystemExit(
+            "usage: hillclimb.py <arch> <shape> [tag=k:v,... ...]\n"
+            "       hillclimb.py memhier [preset] [chainA+chainB ...]")
+    if sys.argv[1] == "memhier":
+        memhier_main(sys.argv[2:])
+        return
+    if len(sys.argv) < 3:
+        raise SystemExit("usage: hillclimb.py <arch> <shape> [tag=k:v,... ...]")
     arch, shape = sys.argv[1], sys.argv[2]
     variants = [parse_variant(s) for s in sys.argv[3:]]
     from repro.launch.dryrun import run_cell

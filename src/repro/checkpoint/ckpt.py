@@ -6,7 +6,7 @@ dims (elastic re-mesh after pod loss: 512→256 chips restores fine; tested
 in tests/dist). Writes are atomic (tmp dir + rename), happen on process 0
 only, and can run asynchronously off the critical path; a preemption
 signal handler forces a synchronous save (straggler/failure story in
-DESIGN.md §5).
+DESIGN.md §6).
 """
 from __future__ import annotations
 

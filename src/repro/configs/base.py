@@ -181,8 +181,8 @@ SHAPES: dict[str, ShapeConfig] = {
 
 
 def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
-    """Is (arch × shape) a valid dry-run cell? (DESIGN.md §7 skip policy)."""
+    """Is (arch × shape) a valid dry-run cell? (DESIGN.md §8 skip policy)."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, ("full-attention arch: 512k dense-KV decode is the "
-                       "quadratic case long_500k excludes (DESIGN.md §7)")
+                       "quadratic case long_500k excludes (DESIGN.md §8)")
     return True, ""

@@ -1,6 +1,6 @@
 """Grok-1 314B [hf:xai-org/grok-1] — 8-expert top-2 MoE. 8 experts % 16
 != 0 → EP falls back to TP-sharded experts (moe_impl='tp');
-DESIGN.md §5 sharding auto-solver."""
+DESIGN.md §6 sharding auto-solver."""
 from .base import ModelConfig
 
 

@@ -58,12 +58,16 @@ class Program:
     ----------
     stages: the per-instruction Stages, in dataflow order.
     name:   display name ("c0_scale+c0_add").
-    model:  burst model used to negotiate the fused block size.
+    model:  memory model used to negotiate the fused block size — either
+            a one-term :class:`BurstModel` (the legacy law) or a
+            :class:`repro.memhier.hierarchy.Hierarchy`, in which case
+            candidates are scored by the trace-driven simulator
+            (:func:`repro.memhier.predict.predict_program`).
     vmem_budget: VMEM capacity bound for resident operand blocks.
     """
 
     def __init__(self, stages: Sequence[Stage], name: Optional[str] = None,
-                 model: BurstModel = TPU_V5E_HBM,
+                 model=TPU_V5E_HBM,
                  vmem_budget: int = VMEM_BYTES):
         stages = tuple(stages)
         if not stages:
@@ -160,11 +164,14 @@ class Program:
         """Pick one (block_rows, block_cols) for the whole fused region.
 
         block_rows is the lcm of the stage row granularities. block_cols is
-        chosen by the burst model: the candidate minimising modeled DMA
+        chosen by the memory model: the candidate minimising modeled DMA
         time for the program's total streamed bytes (wider blocks amortise
         issue overhead; padding waste and the VMEM budget push back — the
-        paper's Fig. 3 trade-off at TPU scale). Returns
-        (block_rows, block_cols, StreamConfig).
+        paper's Fig. 3 trade-off at TPU scale). With a BurstModel the
+        score is the one-term burst law; with a memhier Hierarchy each
+        candidate is simulated trace-driven (per-level traffic included,
+        intermediates elided). Returns (block_rows, block_cols,
+        StreamConfig).
         """
         block_rows = 1
         for st in self.stages:
@@ -177,6 +184,11 @@ class Program:
                       + sum(1 for st in self.stages if st.carry_cols))
         n_io = self.n_ext_vec_in + self.n_vec_out
 
+        use_hierarchy = not isinstance(self.model, BurstModel)
+        if use_hierarchy:
+            # deferred: memhier imports core.stream / core.template
+            from repro.memhier.predict import predict_program
+
         candidates = sorted(set(_BLOCK_COL_CANDIDATES)
                             | {st.block_cols for st in self.stages})
         best = None
@@ -185,13 +197,17 @@ class Program:
             cfg = StreamConfig(vlen_bits=LANES * bits,
                                block_bits=block_elems * bits)
             try:
-                cfg.check_vmem_budget(n_resident, dtype,
-                                      budget=self.vmem_budget)
+                cfg.check_vmem_budget(n_resident, budget=self.vmem_budget)
             except ValueError:
                 continue
-            padded = round_up(max(n_elems, 1), block_elems)
-            t = n_io * self.model.time_for(padded * bits / 8,
-                                           block_elems * bits / 8)
+            if use_hierarchy:
+                t = predict_program(self.model, self, n_elems, dtype,
+                                    block_rows=block_rows,
+                                    block_cols=bc).time_s
+            else:
+                padded = round_up(max(n_elems, 1), block_elems)
+                t = n_io * self.model.time_for(padded * bits / 8,
+                                               block_elems * bits / 8)
             if best is None or t < best[0]:
                 best = (t, bc, cfg)
         if best is None:

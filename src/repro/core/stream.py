@@ -88,19 +88,38 @@ class StreamConfig:
         return (rows, LANES)
 
     # -- budget check (BRAM capacity analogue) ------------------------------
-    def vmem_footprint_bytes(self, n_operands: int, dtype) -> int:
-        """Bytes of VMEM pinned by one instruction's operand blocks."""
-        return n_operands * self.n_buffers * self.block_bits // 8 * 1
+    def vmem_footprint_bytes(self, n_operands: int) -> int:
+        """Bytes of VMEM pinned by one instruction's operand blocks.
 
-    def check_vmem_budget(self, n_operands: int, dtype,
+        ``block_bits`` already fixes the block's size in bits, so the
+        footprint is dtype-independent: a dtype only changes how many
+        *elements* fit in the block (``block_elems``), not its bytes.
+        """
+        return n_operands * self.n_buffers * self.block_bits // 8
+
+    def check_vmem_budget(self, n_operands: int,
                           budget: int = VMEM_BYTES) -> None:
-        fp = self.vmem_footprint_bytes(n_operands, dtype)
+        fp = self.vmem_footprint_bytes(n_operands)
         if fp > budget:
             raise ValueError(
                 f"instruction operand blocks need {fp} B of VMEM "
                 f"({n_operands} operands × {self.n_buffers} buffers × "
                 f"{self.block_bits // 8} B) > budget {budget} B — shrink "
                 f"block_bits (the paper hit the same wall with BRAM, §3.1.3)")
+
+    # -- hierarchy-derived defaults (paper §3.1 knob mapping) ---------------
+    @classmethod
+    def from_hierarchy(cls, hier, n_buffers: int = 2) -> "StreamConfig":
+        """Derive the default geometry from a :class:`repro.memhier.
+        hierarchy.Hierarchy`: VLEN from the first level's block (DL1
+        block = VLEN, §3.1.1) and the DMA block from the LLC block (one
+        block = one burst, §3.1.2), both rounded up to TPU lane/sub-block
+        granularity so the result satisfies ``__post_init__``.
+        """
+        vlen_bits = round_up(hier.levels[0].block_bytes * 8, LANES * 8)
+        block_bits = round_up(hier.llc.block_bytes * 8, vlen_bits)
+        return cls(vlen_bits=vlen_bits, block_bits=block_bits,
+                   n_buffers=n_buffers)
 
 
 def round_up(x: int, mult: int) -> int:

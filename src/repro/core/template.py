@@ -17,7 +17,7 @@ A template is no longer only a monolithic ``__call__``: it exposes its
 body and block geometry as a composable :class:`Stage`, and launching a
 template is just running the single-stage :class:`repro.core.program.
 Program`. Multi-stage programs chain several registered instructions into
-ONE ``pallas_call`` (see ``core/program.py`` and DESIGN.md §4), threading
+ONE ``pallas_call`` (see ``core/program.py`` and DESIGN.md §5), threading
 intermediates through VMEM scratch instead of HBM.
 
 Template guarantees, mirroring the paper's:

@@ -1,7 +1,7 @@
 """Compressed cross-pod collectives + error feedback.
 
 At 1000+ nodes the only slow-axis collective in this framework is the
-cross-pod gradient all-reduce (DESIGN.md §5). DCN/ICI-spanning links are
+cross-pod gradient all-reduce (DESIGN.md §6). DCN/ICI-spanning links are
 ~5-20x slower than in-pod ICI, so we ship an int8 block-quantised ring
 all-reduce (reduce-scatter + all-gather over ``ppermute``) with
 error-feedback state kept by the caller across steps.

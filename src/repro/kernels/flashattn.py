@@ -1,6 +1,6 @@
 """c6_flashattn — fused blockwise attention as one "instruction".
 
-Beyond-paper but paper-idiomatic (DESIGN.md §3): flash attention is a
+Beyond-paper but paper-idiomatic (DESIGN.md §4): flash attention is a
 carried-state streaming primitive — running max m and normaliser l play
 the role of c3_prefixsum's carried batch total, K/V blocks stream through
 the sequential grid dimension while the accumulator stays resident in

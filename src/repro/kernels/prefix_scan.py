@@ -12,7 +12,7 @@ same non-blocking pipelining (grid step i+1's DMA overlaps step i's adds).
 `c4_chunkscan` generalises the carry from (+) to the affine map
 y = a·y_prev + b. That is precisely Mamba2-SSD's inter-chunk state
 recurrence, which is how the paper's instruction shows up inside a modern
-LM stack (DESIGN.md §3).
+LM stack (DESIGN.md §4).
 """
 from __future__ import annotations
 

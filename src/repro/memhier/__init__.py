@@ -1,0 +1,25 @@
+"""repro.memhier — trace-driven cache-hierarchy simulator (paper §3.1).
+
+Replaces the one-term burst law as the repo's memory-system model:
+:mod:`~repro.memhier.hierarchy` describes the levels (DL1 full-block
+write skip, sub-blocked very-wide LLC, DRAM burst model underneath),
+:mod:`~repro.memhier.trace` derives access traces from streaming
+configs / stages / fused programs, and :mod:`~repro.memhier.predict`
+simulates a trace to predicted time, per-level hit/traffic breakdowns,
+and a best-geometry search. See DESIGN.md §3.
+"""
+from .hierarchy import (CacheLevel, Hierarchy, LastLevelCache, PAPER_ULTRA96,
+                        PRESETS, TPU_V5E)
+from .predict import (DramStats, LevelStats, Prediction, best_geometry,
+                      predict_program, simulate, stream_bandwidth,
+                      sweep_llc_blocks)
+from .trace import (Access, demand_bytes, stream_trace, trace_config,
+                    trace_program, trace_program_unfused, trace_stage)
+
+__all__ = [
+    "Access", "CacheLevel", "DramStats", "Hierarchy", "LastLevelCache",
+    "LevelStats", "PAPER_ULTRA96", "PRESETS", "Prediction", "TPU_V5E",
+    "best_geometry", "demand_bytes", "predict_program", "simulate",
+    "stream_bandwidth", "stream_trace", "sweep_llc_blocks", "trace_config",
+    "trace_program", "trace_program_unfused", "trace_stage",
+]

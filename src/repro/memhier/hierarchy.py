@@ -1,0 +1,205 @@
+"""Cache-hierarchy description — paper §3.1 as data.
+
+The paper's memory contribution is a hierarchy optimised for *bandwidth*
+rather than latency:
+
+  * §3.1.1 — the DL1 block equals VLEN, so a full-vector store covers a
+    whole block and the fetch-on-write-miss read is skipped entirely
+    (``full_block_write_skips_fetch``);
+  * §3.1.2 — the last-level cache uses very wide blocks (8192–16384 bit)
+    so that one block maps onto one long DRAM burst, amortising the
+    fixed AXI handshake over many beats;
+  * §3.1.3 — the wide LLC block is *sub-blocked*: validity is tracked at
+    sub-block (VLEN) granularity, so sub-blocks stream out to DL1 before
+    the burst completes and partial writes need no read-fill.
+
+:class:`CacheLevel` captures one level's geometry and write policy,
+:class:`LastLevelCache` adds the sub-block granularity, and
+:class:`Hierarchy` stacks levels over the DRAM/HBM
+:class:`~repro.core.burst_model.BurstModel` (the §3.1.2 burst law — one
+LLC-block fill or writeback is one burst).
+
+Two presets anchor the two platforms the repo models:
+
+  * :data:`PAPER_ULTRA96` — the paper's Ultra96 softcore: 256-bit VLEN /
+    DL1 blocks, a 16384-bit sub-blocked LLC, AXI DRAM (Fig. 3 left).
+  * :data:`TPU_V5E` — the TPU analogue: the (8, 128) fp32 register tile
+    as "DL1", VMEM as the very wide sub-blocked staging level whose
+    block is the per-grid-step HBM→VMEM DMA, HBM as DRAM.
+
+The trace-driven engine that runs a hierarchy lives in
+:mod:`repro.memhier.predict`; access traces come from
+:mod:`repro.memhier.trace`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.burst_model import BurstModel, PAPER_AXI, TPU_V5E_HBM
+from repro.core.stream import VMEM_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLevel:
+    """One cache level: block geometry, capacity, write policy, port speed.
+
+    write_allocate:
+        on a write miss, fetch the block from below before writing
+        (classic fetch-on-write-miss). Ignored when the write covers
+        whole (sub-)blocks and ``full_block_write_skips_fetch`` is set.
+    full_block_write_skips_fetch:
+        paper §3.1.1 — a write covering a whole block (whole sub-blocks
+        for a sub-blocked level) allocates without reading below.
+    bandwidth:
+        bytes/s the level's ports sustain (demand + fill + writeback
+        traffic all cross them); the per-level busy-time term.
+    hit_latency_s:
+        per-access latency; streaming pipelines mostly hide it, so the
+        presets keep it small but it participates in busy time.
+    """
+
+    name: str
+    block_bytes: int
+    capacity_bytes: int
+    bandwidth: float
+    hit_latency_s: float = 0.0
+    write_allocate: bool = True
+    full_block_write_skips_fetch: bool = True
+
+    def __post_init__(self):
+        if self.block_bytes <= 0:
+            raise ValueError(f"{self.name}: block_bytes must be positive")
+        if self.capacity_bytes < self.block_bytes:
+            raise ValueError(
+                f"{self.name}: capacity {self.capacity_bytes} B holds no "
+                f"{self.block_bytes}-byte block")
+        if self.bandwidth <= 0:
+            raise ValueError(f"{self.name}: bandwidth must be positive")
+
+    @property
+    def n_blocks(self) -> int:
+        return self.capacity_bytes // self.block_bytes
+
+    @property
+    def sub_bytes(self) -> int:
+        """Write-skip granularity; a plain level needs the whole block."""
+        return self.block_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class LastLevelCache(CacheLevel):
+    """A very wide, sub-blocked level (paper §3.1.2–3.1.3).
+
+    One block fill/writeback is one DRAM burst; validity at sub-block
+    granularity means writes covering whole sub-blocks skip the fill
+    even when they don't cover the whole (very wide) block.
+    """
+
+    sub_block_bytes: int = 0      # 0 → block_bytes (no sub-blocking)
+
+    def __post_init__(self):
+        super().__post_init__()
+        sub = self.sub_block_bytes or self.block_bytes
+        if self.block_bytes % sub:
+            raise ValueError(
+                f"{self.name}: block {self.block_bytes} B must hold whole "
+                f"{sub}-byte sub-blocks (§3.1.3)")
+
+    @property
+    def sub_bytes(self) -> int:
+        return self.sub_block_bytes or self.block_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    """A stack of cache levels (closest to the core first) over DRAM.
+
+    ``dram`` is the existing :class:`BurstModel`: every last-level block
+    fill or dirty writeback costs one burst, ``overhead_s + bytes/peak``.
+    """
+
+    name: str
+    levels: tuple[CacheLevel, ...]
+    dram: BurstModel
+
+    def __post_init__(self):
+        for above, below in zip(self.levels, self.levels[1:]):
+            if below.block_bytes % above.block_bytes:
+                raise ValueError(
+                    f"{self.name}: {below.name} block ({below.block_bytes} B)"
+                    f" must hold whole {above.name} blocks "
+                    f"({above.block_bytes} B)")
+
+    @property
+    def dl1(self) -> CacheLevel:
+        return self.levels[0]
+
+    @property
+    def llc(self) -> CacheLevel:
+        """The level whose block size is the DRAM burst length (§3.1.2)."""
+        return self.levels[-1]
+
+    def with_llc_block(self, block_bytes: int) -> "Hierarchy":
+        """This hierarchy with the LLC block (= burst length) replaced.
+
+        The geometry-search knob: sweeping it reproduces Fig. 3, and the
+        Program block negotiation evaluates candidates through it.
+        Capacity is bumped to hold at least 4 blocks; the sub-block
+        granularity is kept when it still divides, else collapsed.
+        """
+        if not self.levels:
+            return self
+        llc = self.llc
+        sub = llc.sub_bytes if block_bytes % llc.sub_bytes == 0 else block_bytes
+        repl = dict(
+            block_bytes=block_bytes,
+            capacity_bytes=max(llc.capacity_bytes, 4 * block_bytes),
+        )
+        if isinstance(llc, LastLevelCache):
+            repl["sub_block_bytes"] = sub
+        new_llc = dataclasses.replace(llc, **repl)
+        # keep upper levels no wider than the new LLC block
+        uppers = tuple(
+            lv if block_bytes % lv.block_bytes == 0 else dataclasses.replace(
+                lv, block_bytes=block_bytes,
+                capacity_bytes=max(lv.capacity_bytes, 4 * block_bytes))
+            for lv in self.levels[:-1])
+        return dataclasses.replace(self, levels=uppers + (new_llc,))
+
+
+# -- presets ------------------------------------------------------------------
+
+# The paper's Ultra96 softcore (Fig. 3 left): 256-bit VLEN, DL1 blocks equal
+# to VLEN (§3.1.1), a 16384-bit sub-blocked LLC (§3.1.2-3) in PL BRAM, AXI
+# DRAM with N_1/2 ≈ 128 B. Port rates: one VLEN per ~150 MHz cycle at DL1
+# (4.8 GB/s); the LLC runs the doubled interconnect rate of §3.1.4.
+PAPER_ULTRA96 = Hierarchy(
+    name="paper_ultra96",
+    levels=(
+        CacheLevel("dl1", block_bytes=32, capacity_bytes=32 * 1024,
+                   bandwidth=4.8e9),
+        LastLevelCache("llc", block_bytes=2048, capacity_bytes=512 * 1024,
+                       bandwidth=9.6e9, sub_block_bytes=32),
+    ),
+    dram=PAPER_AXI,
+)
+
+# The TPU v5e analogue: the (8, 128) fp32 tile a kernel body touches per
+# step stands in for DL1 (VREGs, effectively infinite port rate), VMEM is
+# the very wide sub-blocked staging level — its block is the per-grid-step
+# HBM→VMEM DMA, the knob Program.negotiate_geometry sweeps — and HBM is
+# the DRAM burst model (N_1/2 ≈ 410 KB: the paper's very-wide-LLC-block
+# insight three orders of magnitude up).
+TPU_V5E = Hierarchy(
+    name="tpu_v5e",
+    levels=(
+        CacheLevel("vreg", block_bytes=4096, capacity_bytes=64 * 4096,
+                   bandwidth=3e12),
+        LastLevelCache("vmem", block_bytes=512 * 1024,
+                       capacity_bytes=VMEM_BYTES,
+                       bandwidth=1.6e12, sub_block_bytes=4096),
+    ),
+    dram=TPU_V5E_HBM,
+)
+
+PRESETS = {h.name: h for h in (PAPER_ULTRA96, TPU_V5E)}

@@ -1,0 +1,327 @@
+"""Trace-driven hierarchy simulation → predicted time and traffic.
+
+The engine walks an access trace through the :class:`Hierarchy`: each
+level is a fully-associative LRU cache of its blocks; misses fill from
+the level below; dirty evictions write back below; every last-level fill
+or writeback is one DRAM burst priced by the
+:class:`~repro.core.burst_model.BurstModel` (``overhead_s + bytes/peak``
+— the Fig. 3 law the one-term ``BurstModel`` applied to the whole
+machine, now applied only where it belongs, at the burst interface).
+
+Predicted time is the *bottleneck* busy time across levels and DRAM:
+the paper's streaming pipeline (sub-blocked LLC serving DL1 mid-burst,
+§3.1.3; doubled interconnect rate, §3.1.4) and the Pallas grid pipeline
+both overlap levels, so the slowest stage sets throughput. For a pure
+stream with no reuse every byte misses through to DRAM and the predicted
+effective bandwidth collapses to the Fig. 3 burst law at the LLC block
+size — that is the validation gate in ``benchmarks/bench_blocksweep.py``.
+
+Approximations (documented, deliberate):
+  * fully-associative LRU per level (no set conflicts);
+  * a write covering whole sub-blocks allocates without tracking partial
+    validity (§3.1.3 valid bits are assumed to work);
+  * ``hit_latency_s`` charges busy time but not dependent-access latency
+    (streams are independent).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from collections import OrderedDict
+from typing import Iterable, Optional, Sequence
+
+from repro.core.stream import _bits, round_up
+
+from .hierarchy import CacheLevel, Hierarchy
+from .trace import Access, stream_trace, trace_program
+
+# Geometry searches and roofline terms simulate at most this many bytes
+# per stream and scale linearly — streaming traces are cold-miss
+# dominated, so per-byte cost converges fast.
+MAX_SIM_BYTES = 1 << 24
+
+
+@dataclasses.dataclass
+class LevelStats:
+    """Per-level traffic breakdown of one simulation."""
+
+    name: str
+    hits: int = 0
+    misses: int = 0
+    write_skips: int = 0          # §3.1.1 fills avoided on full writes
+    read_bytes: int = 0           # demand reads arriving at this level
+    write_bytes: int = 0          # demand writes arriving at this level
+    fill_bytes: int = 0           # fetched from the level below
+    writeback_bytes: int = 0      # dirty evictions pushed below
+    busy_s: float = 0.0
+
+    @property
+    def accesses(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.accesses if self.accesses else 0.0
+
+    @property
+    def port_bytes(self) -> int:
+        return (self.read_bytes + self.write_bytes
+                + self.fill_bytes + self.writeback_bytes)
+
+
+@dataclasses.dataclass
+class DramStats:
+    """DRAM burst interface totals (one burst per LLC fill/writeback)."""
+
+    bursts: int = 0
+    read_bytes: int = 0
+    write_bytes: int = 0
+    busy_s: float = 0.0
+
+    @property
+    def bytes(self) -> int:
+        return self.read_bytes + self.write_bytes
+
+
+@dataclasses.dataclass
+class Prediction:
+    """Simulation result: time, bandwidth, and the per-level breakdown."""
+
+    time_s: float
+    demand_bytes: int
+    levels: tuple[LevelStats, ...]
+    dram: DramStats
+    bottleneck: str
+    scale: float = 1.0            # >1 when a capped trace was extrapolated
+
+    @property
+    def effective_bw(self) -> float:
+        return self.demand_bytes / self.time_s if self.time_s > 0 else 0.0
+
+    def level(self, name: str) -> LevelStats:
+        for st in self.levels:
+            if st.name == name:
+                return st
+        raise KeyError(name)
+
+
+class _DramSim:
+    def __init__(self, model):
+        self.model = model
+        self.stats = DramStats()
+
+    def _burst(self, nbytes: int) -> None:
+        self.stats.bursts += 1
+        self.stats.busy_s += self.model.overhead_s + nbytes / self.model.peak_bw
+
+    def read(self, addr: int, nbytes: int) -> None:
+        self.stats.read_bytes += nbytes
+        self._burst(nbytes)
+
+    def write(self, addr: int, nbytes: int) -> None:
+        self.stats.write_bytes += nbytes
+        self._burst(nbytes)
+
+
+class _LevelSim:
+    def __init__(self, level: CacheLevel, below):
+        self.level = level
+        self.below = below
+        self.lines: OrderedDict[int, bool] = OrderedDict()   # addr -> dirty
+        self.stats = LevelStats(name=level.name)
+
+    def _chunks(self, addr: int, nbytes: int):
+        """Split an access into (chunk_addr, chunk_bytes, line_addr)."""
+        B = self.level.block_bytes
+        end = addr + nbytes
+        a = addr
+        while a < end:
+            la = (a // B) * B
+            csize = min(la + B, end) - a
+            yield a, csize, la
+            a += csize
+
+    def _insert(self, la: int, dirty: bool) -> None:
+        self.lines[la] = dirty
+        if len(self.lines) > self.level.n_blocks:
+            old, was_dirty = self.lines.popitem(last=False)
+            if was_dirty:
+                self.stats.writeback_bytes += self.level.block_bytes
+                self.below.write(old, self.level.block_bytes)
+
+    def read(self, addr: int, nbytes: int) -> None:
+        self.stats.read_bytes += nbytes
+        B = self.level.block_bytes
+        for _, _, la in self._chunks(addr, nbytes):
+            if la in self.lines:
+                self.stats.hits += 1
+                self.lines.move_to_end(la)
+            else:
+                self.stats.misses += 1
+                self.below.read(la, B)
+                self.stats.fill_bytes += B
+                self._insert(la, False)
+
+    def write(self, addr: int, nbytes: int) -> None:
+        self.stats.write_bytes += nbytes
+        B = self.level.block_bytes
+        sub = self.level.sub_bytes
+        for a, csize, la in self._chunks(addr, nbytes):
+            if la in self.lines:
+                self.stats.hits += 1
+                self.lines[la] = True
+                self.lines.move_to_end(la)
+                continue
+            self.stats.misses += 1
+            covers_subs = (a % sub == 0) and (csize % sub == 0)
+            if covers_subs and self.level.full_block_write_skips_fetch:
+                # §3.1.1 / §3.1.3: whole (sub-)blocks written → no fill.
+                self.stats.write_skips += 1
+                self._insert(la, True)
+            elif self.level.write_allocate:
+                self.below.read(la, B)            # fetch-on-write-miss
+                self.stats.fill_bytes += B
+                self._insert(la, True)
+            else:
+                self.below.write(a, csize)        # write-through, no allocate
+
+    def finish(self) -> None:
+        self.stats.busy_s = (
+            self.stats.accesses * self.level.hit_latency_s
+            + self.stats.port_bytes / self.level.bandwidth)
+
+
+def simulate(hier: Hierarchy, trace: Iterable[Access]) -> Prediction:
+    """Run a trace through the hierarchy; returns the full breakdown."""
+    dram = _DramSim(hier.dram)
+    below = dram
+    sims: list[_LevelSim] = []
+    for level in reversed(hier.levels):
+        below = _LevelSim(level, below)
+        sims.append(below)
+    sims.reverse()                                # core-side first
+    top = sims[0] if sims else dram
+
+    demand = 0
+    for acc in trace:
+        demand += acc.nbytes
+        if acc.kind == "r":
+            top.read(acc.addr, acc.nbytes)
+        elif acc.kind == "w":
+            top.write(acc.addr, acc.nbytes)
+        else:
+            raise ValueError(f"unknown access kind {acc.kind!r}")
+    # flush: dirty lines eventually drain to DRAM; charge them now so a
+    # write stream's traffic is not hidden by the finite trace.
+    for sim in sims:
+        for la, dirty in sim.lines.items():
+            if dirty:
+                sim.stats.writeback_bytes += sim.level.block_bytes
+                sim.below.write(la, sim.level.block_bytes)
+        sim.lines.clear()
+        sim.finish()
+
+    busy = {st.stats.name: st.stats.busy_s for st in sims}
+    busy["dram"] = dram.stats.busy_s
+    bottleneck = max(busy, key=busy.get) if busy else "dram"
+    return Prediction(
+        time_s=max(busy.values()) if busy else 0.0,
+        demand_bytes=demand,
+        levels=tuple(st.stats for st in sims),
+        dram=dram.stats,
+        bottleneck=bottleneck,
+    )
+
+
+# -- convenience predictors ---------------------------------------------------
+
+def stream_bandwidth(hier: Hierarchy, n_bytes: int,
+                     block_bytes: Optional[int] = None,
+                     n_read: int = 1, n_write: int = 0,
+                     max_sim_bytes: int = MAX_SIM_BYTES) -> Prediction:
+    """Predict a pure streaming workload (the Fig. 3 memcpy shape).
+
+    ``block_bytes`` is the per-step access size (defaults to the LLC
+    block — one access per burst). Large workloads are simulated capped
+    and extrapolated linearly (cold-miss streams have constant per-byte
+    cost); the returned stats describe the simulated window, ``time_s``
+    and ``demand_bytes`` the full workload.
+    """
+    block = block_bytes or hier.llc.block_bytes
+    if n_bytes <= 0:
+        return simulate(hier, ())
+    sim_bytes = min(n_bytes, max(round_up(max_sim_bytes, block), 4 * block))
+    sim_bytes = round_up(sim_bytes, block) if sim_bytes < n_bytes else sim_bytes
+    trace = stream_trace(sim_bytes, block,
+                         [f"in{i}" for i in range(n_read)],
+                         [f"out{i}" for i in range(n_write)])
+    pred = simulate(hier, trace)
+    scale = n_bytes / sim_bytes
+    if scale > 1.0:
+        pred.time_s *= scale
+        pred.demand_bytes = int(pred.demand_bytes * scale)
+        pred.scale = scale
+    return pred
+
+
+def predict_program(hier: Hierarchy, program, n_elems: int, dtype,
+                    block_rows: Optional[int] = None,
+                    block_cols: Optional[int] = None,
+                    max_sim_bytes: int = MAX_SIM_BYTES) -> Prediction:
+    """Predicted execution profile of one fused Program launch.
+
+    The LLC block is pinned to the DMA block (one grid step = one burst
+    per stream, §3.1.2) and the trace elides chained intermediates.
+    When no geometry is given, the DMA block is derived from the
+    hierarchy's own LLC block — so sweeping hierarchy parameters (e.g.
+    ``experiments/hillclimb.py memhier``) moves the prediction; the
+    Program negotiation passes explicit candidates instead. Large
+    ``n_elems`` are capped and extrapolated.
+    """
+    from repro.core.stream import LANES
+    stages = program.stages
+    bits = _bits(dtype)
+    if block_rows is None:
+        block_rows = max(st.block_rows for st in stages)
+    if block_cols is None:
+        target_elems = max(1, hier.llc.block_bytes * 8 // bits)
+        block_cols = max(LANES,
+                         target_elems // (block_rows * LANES) * LANES)
+    block_elems = block_rows * block_cols
+    elem_bytes = max(1, bits // 8)
+    cap_elems = max(4 * block_elems, max_sim_bytes // elem_bytes)
+    n_sim = min(n_elems, cap_elems)
+    h = hier.with_llc_block(block_elems * bits // 8)
+    pred = simulate(h, trace_program(program, n_sim, dtype,
+                                     block_rows=block_rows,
+                                     block_cols=block_cols))
+    padded = round_up(max(n_elems, 1), block_elems)
+    padded_sim = round_up(max(n_sim, 1), block_elems)
+    scale = padded / padded_sim
+    if scale > 1.0:
+        pred.time_s *= scale
+        pred.demand_bytes = int(pred.demand_bytes * scale)
+        pred.scale = scale
+    return pred
+
+
+def best_geometry(hier: Hierarchy, program, n_elems: int, dtype):
+    """Search the block-candidate space for the modeled-time optimum.
+
+    Reuses the Program's own candidate set and VMEM-budget filter (so
+    hierarchy- and burst-law-negotiated geometries are comparable), but
+    scores every candidate with the full hierarchy simulation. Returns
+    ``(block_rows, block_cols, Prediction)``.
+    """
+    prog = copy.copy(program)
+    prog.model = hier
+    br, bc, _ = prog.negotiate_geometry(n_elems, dtype)
+    return br, bc, predict_program(hier, program, n_elems, dtype,
+                                   block_rows=br, block_cols=bc)
+
+
+def sweep_llc_blocks(hier: Hierarchy, n_bytes: int,
+                     blocks: Sequence[int]) -> list[tuple[int, Prediction]]:
+    """Fig. 3 reproduction: predicted stream bandwidth per LLC block size."""
+    return [(b, stream_bandwidth(hier.with_llc_block(b), n_bytes))
+            for b in blocks]

@@ -8,7 +8,7 @@ impl='kernel'   — c6_flashattn Pallas kernel (TPU target; 'interpret' in
                   kernel tests).
 
 Decode: one new token against a KV cache whose *sequence* dim is sharded
-over the `model` mesh axis (DESIGN.md §5 — kv-head counts never divide a
+over the `model` mesh axis (DESIGN.md §6 — kv-head counts never divide a
 16-way TP axis, seq does). The softmax/weighted-sum reductions over the
 sharded seq dim compile to the partial-reduce + small all-reduce pattern
 (flash-decode); the roofline table verifies the collective bytes.

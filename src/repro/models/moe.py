@@ -1,7 +1,7 @@
 """Mixture-of-Experts with sorting-network routing + prefix-sum dispatch.
 
 This layer is where the paper's two showcase instructions live in a
-modern LM (DESIGN.md §3):
+modern LM (DESIGN.md §4):
 
   * c5_topk — per-token expert selection is a key/payload bitonic network
     (ONE multi-operand instruction vs. the min/max/shuffle zoo, §6);

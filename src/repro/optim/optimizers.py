@@ -2,7 +2,7 @@
 
 AdamW for the ≤100B archs; Adafactor (factored second moment, no first
 moment) for the ≥300B MoEs where Adam's fp32 m/v cannot fit the pod
-(DESIGN.md §9). Optimizer states inherit the parameter's logical axes so
+(DESIGN.md §10). Optimizer states inherit the parameter's logical axes so
 they shard identically (ZeRO-style: state lives wherever the param
 shard lives).
 """

@@ -111,10 +111,35 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
+def hierarchy_memory_term(hbm_bytes: float, hierarchy,
+                          block_bytes: Optional[int] = None) -> float:
+    """Memory seconds for ``hbm_bytes`` of streaming traffic, predicted by
+    the :mod:`repro.memhier` simulator instead of the flat ``bytes/peak``
+    law: the DRAM burst overhead at the hierarchy's (or the given) block
+    size and any slower intermediate level are both charged, so small
+    blocks cost more than peak-bandwidth accounting admits.
+    """
+    from repro.memhier.predict import stream_bandwidth   # deferred import
+    n = int(math.ceil(hbm_bytes))
+    if n <= 0:
+        return 0.0
+    pred = stream_bandwidth(hierarchy, n, block_bytes=block_bytes)
+    return pred.time_s
+
+
 def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
-                   hw: dict = HW_V5E, slow_axis_bytes: float = 0.0) -> dict:
+                   hw: dict = HW_V5E, slow_axis_bytes: float = 0.0,
+                   hierarchy=None, hier_block_bytes: Optional[int] = None,
+                   ) -> dict:
+    """Three-term roofline. With ``hierarchy`` (a repro.memhier
+    Hierarchy), the memory term is the trace-driven prediction —
+    burst-overhead- and level-aware — instead of ``bytes / peak_bw``."""
     t_compute = flops / hw["flops_bf16"]
-    t_memory = hbm_bytes / hw["hbm_bw"]
+    if hierarchy is not None:
+        t_memory = hierarchy_memory_term(hbm_bytes, hierarchy,
+                                         hier_block_bytes)
+    else:
+        t_memory = hbm_bytes / hw["hbm_bw"]
     t_coll = coll_bytes / hw["ici_bw"] + slow_axis_bytes / hw["dcn_bw"]
     terms = {"compute_s": t_compute, "memory_s": t_memory,
              "collective_s": t_coll}

@@ -1,0 +1,93 @@
+"""core/burst_model.py — the one-term Fig. 3 law (previously untested).
+
+The memhier simulator collapses to this law for pure streams, so its
+semantics are load-bearing: n_half, monotonicity, the ~1 KiB paper
+plateau, and the partial-block behaviour of time_for.
+"""
+import math
+
+import pytest
+
+from repro.core.burst_model import (BurstModel, PAPER_AXI, TPU_V5E_HBM,
+                                    TPU_V5E_ICI)
+
+MODELS = (PAPER_AXI, TPU_V5E_HBM, TPU_V5E_ICI)
+
+
+class TestNHalf:
+    def test_n_half_is_overhead_times_peak(self):
+        for m in MODELS:
+            assert m.n_half_bytes == pytest.approx(m.peak_bw * m.overhead_s)
+
+    def test_half_peak_at_n_half(self):
+        # the defining property: a block of N_1/2 bytes reaches peak/2
+        for m in MODELS:
+            assert m.effective_bw(m.n_half_bytes) == pytest.approx(
+                0.5 * m.peak_bw)
+
+    def test_paper_n_half_is_128_bytes(self):
+        assert PAPER_AXI.n_half_bytes == pytest.approx(128.0)
+
+
+class TestEffectiveBw:
+    def test_monotonically_increasing_in_block_size(self):
+        for m in MODELS:
+            bws = [m.effective_bw(2.0 ** k) for k in range(0, 28)]
+            assert all(b2 > b1 for b1, b2 in zip(bws, bws[1:]))
+
+    def test_bounded_by_peak(self):
+        for m in MODELS:
+            assert m.effective_bw(1 << 30) < m.peak_bw
+            assert m.effective_bw(1 << 30) > 0.9 * m.peak_bw
+
+    def test_zero_block_is_zero_bandwidth(self):
+        assert PAPER_AXI.effective_bw(0.0) == 0.0
+
+
+class TestPlateau:
+    def test_paper_plateau_is_about_1kib(self):
+        # Fig. 3 left: ~90% of peak around 8192-bit ≈ 1 KiB blocks
+        plateau = PAPER_AXI.plateau_block_bytes(0.9)
+        assert plateau == pytest.approx(9.0 * PAPER_AXI.n_half_bytes)
+        assert abs(plateau - 1024) / 1024 < 0.15
+
+    def test_plateau_block_achieves_fraction(self):
+        for m in MODELS:
+            for frac in (0.5, 0.9, 0.99):
+                blk = m.plateau_block_bytes(frac)
+                assert m.effective_bw(blk) == pytest.approx(frac * m.peak_bw)
+
+    def test_plateau_at_half_is_n_half(self):
+        for m in MODELS:
+            assert m.plateau_block_bytes(0.5) == pytest.approx(m.n_half_bytes)
+
+
+class TestTimeFor:
+    def test_whole_blocks(self):
+        m = BurstModel(peak_bw=1e9, overhead_s=1e-6)
+        t = m.time_for(4096, 1024)
+        assert t == pytest.approx(4 * (1e-6 + 1024 / 1e9))
+
+    def test_partial_single_block_pays_one_full_burst(self):
+        # total < block: still one burst of the full block length
+        m = BurstModel(peak_bw=1e9, overhead_s=1e-6)
+        assert m.time_for(100, 1024) == pytest.approx(1e-6 + 1024 / 1e9)
+        assert m.time_for(100, 1024) == m.time_for(1024, 1024)
+
+    def test_fractional_bursts_scale_linearly(self):
+        m = BurstModel(peak_bw=1e9, overhead_s=1e-6)
+        assert m.time_for(1536, 1024) == pytest.approx(
+            1.5 * m.time_for(1024, 1024))
+
+    def test_monotone_in_total_bytes_above_one_block(self):
+        m = PAPER_AXI
+        ts = [m.time_for(n, 256) for n in (256, 512, 1024, 4096)]
+        assert all(t2 > t1 for t1, t2 in zip(ts, ts[1:]))
+
+    def test_wider_blocks_never_slower_for_aligned_totals(self):
+        m = PAPER_AXI
+        total = 1 << 20
+        ts = [m.time_for(total, 1 << k) for k in range(5, 15)]
+        assert all(t2 <= t1 for t1, t2 in zip(ts, ts[1:]))
+        assert math.isclose(total / ts[-1],
+                            m.effective_bw(1 << 14), rel_tol=1e-9)

@@ -101,7 +101,13 @@ class TestStreamConfig:
     def test_vmem_budget(self):
         s = StreamConfig()
         with pytest.raises(ValueError):
-            s.check_vmem_budget(6, jnp.float32, budget=1024)
+            s.check_vmem_budget(6, budget=1024)
+
+    def test_vmem_footprint_is_dtype_independent(self):
+        # block_bits fixes the block's size in bits; dtype only changes
+        # how many elements fit, never the byte footprint.
+        s = StreamConfig()
+        assert s.vmem_footprint_bytes(3) == 3 * s.n_buffers * s.block_bits // 8
 
     def test_burst_model_plateau(self):
         from repro.core.burst_model import PAPER_AXI

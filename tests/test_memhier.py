@@ -1,0 +1,304 @@
+"""repro.memhier — trace-driven hierarchy simulator (ISSUE 2 tentpole).
+
+Covers the engine semantics (LRU, write policies, sub-blocking,
+writebacks), the Fig. 3 acceptance criteria (PAPER_ULTRA96 within 15%
+of the burst law at the plateau, half-peak crossover at N_1/2), the
+fused-chain intermediate elision, and the geometry-negotiation
+same-or-better guarantee on every fused chain test_fusion exercises.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401 — registers the ISA
+from repro.core import isa
+from repro.core.burst_model import BurstModel, PAPER_AXI
+from repro.core.program import Program
+from repro.core.stream import LANES, StreamConfig
+from repro.memhier import (Access, CacheLevel, Hierarchy, LastLevelCache,
+                           PAPER_ULTRA96, TPU_V5E, best_geometry,
+                           predict_program, simulate, stream_bandwidth,
+                           stream_trace, trace_program,
+                           trace_program_unfused)
+
+DRAM = BurstModel(peak_bw=1e9, overhead_s=64e-9)
+
+
+def tiny_hier(**dl1_kw):
+    """One 2-block 64B-line level over DRAM — hand-checkable."""
+    level = CacheLevel("l1", block_bytes=64, capacity_bytes=128,
+                       bandwidth=1e12, **dl1_kw)
+    return Hierarchy("tiny", (level,), DRAM)
+
+
+def run(hier, accesses):
+    return simulate(hier, iter(accesses))
+
+
+class TestEngine:
+    def test_second_read_hits(self):
+        p = run(tiny_hier(), [Access(0, 64, "r", "a"),
+                              Access(0, 64, "r", "a")])
+        l1 = p.level("l1")
+        assert (l1.misses, l1.hits) == (1, 1)
+        assert p.dram.bursts == 1 and p.dram.read_bytes == 64
+
+    def test_lru_eviction_order(self):
+        # 2-line cache: A B C evicts A; re-reading A misses again
+        addrs = [0, 64, 128, 0]
+        p = run(tiny_hier(), [Access(a, 64, "r", "a") for a in addrs])
+        assert p.level("l1").misses == 4 and p.level("l1").hits == 0
+
+    def test_lru_refresh_on_hit(self):
+        # A B A C: the hit on A refreshes it, so C evicts B, not A
+        addrs = [0, 64, 0, 128, 0]
+        p = run(tiny_hier(), [Access(a, 64, "r", "a") for a in addrs])
+        assert p.level("l1").hits == 2      # second A and final A
+
+    def test_full_block_write_skips_fetch(self):
+        p = run(tiny_hier(), [Access(0, 64, "w", "a")])
+        l1 = p.level("l1")
+        assert l1.write_skips == 1
+        assert p.dram.read_bytes == 0       # §3.1.1: no fetch-on-write-miss
+        assert p.dram.write_bytes == 64     # flushed writeback
+
+    def test_partial_write_miss_fetches_when_write_allocate(self):
+        p = run(tiny_hier(), [Access(0, 16, "w", "a")])
+        assert p.dram.read_bytes == 64      # fetch-on-write-miss
+        assert p.dram.write_bytes == 64     # dirty flush
+
+    def test_partial_write_without_allocate_writes_through(self):
+        p = run(tiny_hier(write_allocate=False,
+                          full_block_write_skips_fetch=False),
+                [Access(0, 16, "w", "a")])
+        assert p.dram.read_bytes == 0
+        assert p.dram.write_bytes == 16     # write-through, not cached
+        assert p.level("l1").fill_bytes == 0
+
+    def test_dirty_eviction_writes_back(self):
+        # write A, then read B C to evict A → one 64B writeback + flushes
+        p = run(tiny_hier(), [Access(0, 64, "w", "a"),
+                              Access(64, 64, "r", "b"),
+                              Access(128, 64, "r", "c")])
+        assert p.dram.write_bytes == 64
+        assert p.level("l1").writeback_bytes == 64
+
+    def test_access_split_across_lines(self):
+        p = run(tiny_hier(), [Access(32, 64, "r", "a")])   # straddles 2 lines
+        assert p.level("l1").misses == 2
+        assert p.dram.read_bytes == 128
+
+    def test_sub_blocked_write_skip(self):
+        # 256B LLC line, 64B sub-blocks: a 64B-aligned write skips the
+        # fill even though it covers only a quarter of the line (§3.1.3)
+        llc = LastLevelCache("llc", block_bytes=256, capacity_bytes=1024,
+                             bandwidth=1e12, sub_block_bytes=64)
+        h = Hierarchy("sub", (llc,), DRAM)
+        p = run(h, [Access(0, 64, "w", "a")])
+        assert p.level("llc").write_skips == 1
+        assert p.dram.read_bytes == 0
+
+    def test_unaligned_sub_block_write_fetches(self):
+        llc = LastLevelCache("llc", block_bytes=256, capacity_bytes=1024,
+                             bandwidth=1e12, sub_block_bytes=64)
+        h = Hierarchy("sub", (llc,), DRAM)
+        p = run(h, [Access(16, 32, "w", "a")])
+        assert p.dram.read_bytes == 256
+
+    def test_bottleneck_is_slowest_stage(self):
+        slow = Hierarchy("slow", (
+            CacheLevel("l1", block_bytes=64, capacity_bytes=128,
+                       bandwidth=1.0),), DRAM)     # 1 B/s level
+        p = run(slow, [Access(0, 64, "r", "a")])
+        assert p.bottleneck == "l1"
+        assert p.time_s == pytest.approx(p.level("l1").busy_s)
+
+
+class TestValidation:
+    def test_capacity_must_hold_a_block(self):
+        with pytest.raises(ValueError, match="holds no"):
+            CacheLevel("x", block_bytes=128, capacity_bytes=64, bandwidth=1e9)
+
+    def test_llc_block_must_hold_whole_sub_blocks(self):
+        with pytest.raises(ValueError, match="sub-block"):
+            LastLevelCache("x", block_bytes=100, capacity_bytes=1000,
+                           bandwidth=1e9, sub_block_bytes=64)
+
+    def test_levels_must_nest(self):
+        with pytest.raises(ValueError, match="whole"):
+            Hierarchy("bad", (
+                CacheLevel("a", block_bytes=48, capacity_bytes=96,
+                           bandwidth=1e9),
+                CacheLevel("b", block_bytes=64, capacity_bytes=128,
+                           bandwidth=1e9)), DRAM)
+
+    def test_unknown_access_kind_raises(self):
+        with pytest.raises(ValueError, match="kind"):
+            run(tiny_hier(), [Access(0, 64, "x", "a")])
+
+
+class TestFig3Acceptance:
+    """ISSUE 2: PAPER_ULTRA96 vs the BurstModel law."""
+
+    N = 1 << 20
+
+    @pytest.mark.parametrize("bits", [512, 1024, 2048, 4096, 8192, 16384])
+    def test_within_15pct_of_law_across_sweep(self, bits):
+        blk = bits // 8
+        pred = stream_bandwidth(PAPER_ULTRA96.with_llc_block(blk), self.N)
+        law = PAPER_AXI.effective_bw(blk)
+        assert abs(pred.effective_bw - law) / law <= 0.15
+
+    def test_half_peak_crossover_at_n_half(self):
+        blk = int(PAPER_AXI.n_half_bytes)
+        pred = stream_bandwidth(PAPER_ULTRA96.with_llc_block(blk), self.N)
+        assert pred.effective_bw / PAPER_AXI.peak_bw == pytest.approx(
+            0.5, rel=0.15)
+
+    def test_sweep_shape_rises_to_plateau(self):
+        bws = [stream_bandwidth(PAPER_ULTRA96.with_llc_block(b),
+                                self.N).effective_bw
+               for b in (64, 128, 256, 512, 1024, 2048)]
+        assert all(b2 > b1 for b1, b2 in zip(bws, bws[1:]))
+        plateau = stream_bandwidth(PAPER_ULTRA96.with_llc_block(16384),
+                                   self.N).effective_bw
+        assert bws[-1] > 0.9 * plateau
+
+    def test_large_stream_extrapolation_matches_direct(self):
+        # capped-and-scaled prediction ≈ a directly simulated smaller one
+        big = stream_bandwidth(PAPER_ULTRA96, 1 << 28)
+        small = stream_bandwidth(PAPER_ULTRA96, 1 << 22)
+        assert big.scale > 1.0
+        assert big.effective_bw == pytest.approx(small.effective_bw,
+                                                 rel=0.01)
+
+
+class TestFusedTraces:
+    def test_intermediates_are_elided(self):
+        prog = isa.fuse("c0_scale", "c0_add").program
+        n = 1 << 16
+        fused = simulate(TPU_V5E, trace_program(prog, n, jnp.float32))
+        unfused = simulate(TPU_V5E,
+                           trace_program_unfused(prog, n, jnp.float32))
+        sim = unfused.dram.bytes / fused.dram.bytes
+        model = (prog.hbm_bytes_unfused(n, jnp.float32)
+                 / prog.hbm_bytes_fused(n, jnp.float32))
+        assert sim == pytest.approx(model, rel=0.1)
+
+    def test_fused_dram_traffic_matches_analytic_bytes(self):
+        # streams sized a whole number of LLC blocks, so no over-fetch
+        prog = isa.fuse("c0_scale", "c0_add", "c0_copy").program
+        n = 1 << 20      # 4 MiB fp32 = 8 × the 512 KiB v5e staging block
+        pred = simulate(TPU_V5E, trace_program(prog, n, jnp.float32))
+        assert pred.dram.bytes == pytest.approx(
+            prog.hbm_bytes_fused(n, jnp.float32), rel=0.01)
+
+    def test_short_stream_overfetches_wide_blocks(self):
+        # a stream shorter than one LLC block pays the whole burst —
+        # the wide-block trade-off the one-term law could not see
+        prog = isa.fuse("c0_scale", "c0_add", "c0_copy").program
+        n = 1 << 16      # 256 KiB fp32 < one 512 KiB block
+        pred = simulate(TPU_V5E, trace_program(prog, n, jnp.float32))
+        assert pred.dram.bytes > prog.hbm_bytes_fused(n, jnp.float32)
+
+    def test_streams_never_alias(self):
+        accs = list(stream_trace(4096, 1024, ["a", "b"], ["c"]))
+        regions = {a.stream: a.addr >> 40 for a in accs}
+        assert len(set(regions.values())) == 3
+
+
+# every fused chain tests/test_fusion.py exercises (ISSUE 2 acceptance)
+FUSION_CHAINS = [
+    ("c0_scale", "c0_add"),
+    ("c0_add", "c0_scale"),
+    ("c0_copy", "c0_triad"),
+    ("c0_scale", "c0_copy"),
+    ("c0_scale", "c0_add", "c0_copy"),
+    ("c0_add", "c0_triad"),
+    ("c0_triad", "c0_triad"),
+]
+
+
+class TestHierarchyNegotiation:
+    @pytest.mark.parametrize("names", FUSION_CHAINS,
+                             ids=["+".join(c) for c in FUSION_CHAINS])
+    def test_hierarchy_pick_no_worse_than_burst_law_pick(self, names):
+        prog = isa.fuse(*names).program
+        n = 1 << 18
+        br_law, bc_law, _ = prog.negotiate_geometry(n, jnp.float32)
+        br, bc, pred = best_geometry(TPU_V5E, prog, n, jnp.float32)
+        t_law_pick = predict_program(TPU_V5E, prog, n, jnp.float32,
+                                     block_rows=br_law,
+                                     block_cols=bc_law).time_s
+        assert pred.time_s <= t_law_pick * (1 + 1e-9)
+        assert bc % LANES == 0 and br % 8 == 0
+
+    def test_program_accepts_hierarchy_as_model(self):
+        stages = tuple(isa.get(n).template.stage()
+                       for n in ("c0_scale", "c0_add"))
+        prog = Program(stages, model=TPU_V5E)
+        br, bc, cfg = prog.negotiate_geometry(1 << 18, jnp.float32)
+        assert cfg.block_bits == br * bc * 32
+
+    def test_program_with_hierarchy_still_computes_correctly(self):
+        stages = tuple(isa.get(n).template.stage()
+                       for n in ("c0_scale", "c0_add"))
+        prog = Program(stages, model=TPU_V5E)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal(2000), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(2000), jnp.float32)
+        got = prog(3.0, x, b, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(3.0 * x + b),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_budget_filter_still_applies(self):
+        stages = tuple(isa.get(n).template.stage()
+                       for n in ("c0_scale", "c0_add"))
+        prog = Program(stages, model=TPU_V5E, vmem_budget=1024)
+        with pytest.raises(ValueError, match="VMEM budget"):
+            prog.negotiate_geometry(1 << 20, jnp.float32)
+
+
+class TestStreamConfigFromHierarchy:
+    def test_paper_preset_rounds_to_lane_granularity(self):
+        cfg = StreamConfig.from_hierarchy(PAPER_ULTRA96)
+        assert cfg.vlen_bits % (LANES * 8) == 0
+        assert cfg.block_bits % cfg.vlen_bits == 0
+
+    def test_v5e_preset_matches_dma_block(self):
+        cfg = StreamConfig.from_hierarchy(TPU_V5E)
+        assert cfg.block_bits == TPU_V5E.llc.block_bytes * 8
+        assert cfg.vlen_bits == TPU_V5E.dl1.block_bytes * 8
+
+
+class TestWithLlcBlock:
+    def test_replaces_block_and_keeps_nesting(self):
+        h = PAPER_ULTRA96.with_llc_block(4096)
+        assert h.llc.block_bytes == 4096
+        assert h.llc.capacity_bytes >= 4 * 4096
+        assert h.llc.block_bytes % h.dl1.block_bytes == 0
+
+    def test_sub_block_collapses_when_not_dividing(self):
+        h = PAPER_ULTRA96.with_llc_block(48)
+        assert h.llc.sub_bytes == 48
+
+    def test_tiny_block_shrinks_upper_levels(self):
+        h = PAPER_ULTRA96.with_llc_block(16)    # below the 32B DL1 block
+        assert h.dl1.block_bytes == 16
+
+
+class TestRooflineHierarchyTerm:
+    def test_hierarchy_term_charges_burst_overhead(self):
+        from repro.roofline.analysis import HW_V5E, roofline_terms
+        flops, hbm = 1e12, 1e9
+        flat = roofline_terms(flops, hbm, 0.0)
+        hier = roofline_terms(flops, hbm, 0.0, hierarchy=TPU_V5E)
+        assert hier["memory_s"] > flat["memory_s"]      # overhead charged
+        assert hier["memory_s"] < 10 * flat["memory_s"]  # same order
+        assert flat["memory_s"] == pytest.approx(hbm / HW_V5E["hbm_bw"])
+
+    def test_zero_bytes_zero_term(self):
+        from repro.roofline.analysis import hierarchy_memory_term
+        assert hierarchy_memory_term(0.0, TPU_V5E) == 0.0
