@@ -1,0 +1,109 @@
+"""Graph-partitioner quality gates (repro.graph, DESIGN.md §11).
+
+On a branching DAG (the ``axpby_residual`` c0 pipeline: a fusable
+scale→add→copy chain next to a triad branch sharing both inputs) the
+searched Plan must be
+
+  * ≥ 1.5× better than the all-unfused plan in modeled HBM bytes;
+  * never worse than the all-unfused plan AND every hand-written
+    linear-chain split, in both modeled HBM bytes and memhier-predicted
+    time (TPU_V5E hierarchy);
+  * numerically identical to the ``ref``-mode oracle in interpret mode —
+    for the searched plan and for every other DAG shape the c0 family
+    ships (join, diamond fan-out).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import partition, plan_from_chains
+from repro.kernels import ops  # noqa: F401 — registers the ISA
+from repro.kernels.ops import C0_PIPELINES, c0_pipeline_graph
+from repro.memhier import TPU_V5E
+from repro.roofline.analysis import plan_report
+
+from .common import row
+
+N = 1 << 18
+
+# Hand-written linear-chain splits of axpby_residual (nodes: 0=scale,
+# 1=add, 2=copy, 3=triad) — every legal way to cut the chain by hand.
+HAND_SPLITS = [
+    [[0], [1], [2], [3]],
+    [[0, 1], [2], [3]],
+    [[0], [1, 2], [3]],
+    [[0, 1, 2], [3]],
+]
+
+
+def _operands(g, rng):
+    ops_ = []
+    for name, key in g.free_inputs():
+        if hasattr(key, "nid"):                      # vector input
+            ops_.append(jnp.asarray(rng.standard_normal(4096), jnp.float32))
+        else:
+            ops_.append(float(rng.standard_normal()))
+    return ops_
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    g = c0_pipeline_graph("axpby_residual")
+
+    searched = partition(g, model=TPU_V5E, n_elems=N, method="beam")
+    unfused = partition(g, model=TPU_V5E, n_elems=N, method="singletons")
+    hands = [plan_from_chains(g, c, model=TPU_V5E, n_elems=N)
+             for c in HAND_SPLITS]
+
+    f32 = jnp.float32
+    b_search = searched.modeled_hbm_bytes(N, f32)
+    b_unf = unfused.modeled_hbm_bytes(N, f32)
+    t_search = searched.predicted_time()
+    t_unf = unfused.predicted_time()
+    row("graph_axpby_searched_chains", 0.0,
+        "|".join("-".join(map(str, c)) for c in searched.chains()))
+    row("graph_axpby_hbm_bytes", 0.0, f"searched:{b_search}_unfused:{b_unf}")
+    row("graph_axpby_bytes_reduction", 0.0,
+        f"{b_unf / b_search:.2f}x(floor:1.5x)")
+    row("graph_axpby_predicted_us", t_search * 1e6,
+        f"unfused:{t_unf * 1e6:.1f}us_speedup:{t_unf / t_search:.2f}x")
+
+    # -- gates: ≥1.5× vs all-unfused; never worse than any hand split ------
+    assert b_unf / b_search >= 1.5, \
+        f"searched plan only {b_unf / b_search:.2f}x better than unfused"
+    assert t_search <= t_unf * (1 + 1e-9), \
+        "searched plan predicted slower than all-unfused"
+    for split, hand in zip(HAND_SPLITS, hands):
+        bh, th = hand.modeled_hbm_bytes(N, f32), hand.predicted_time()
+        assert b_search <= bh, \
+            f"hand split {split} beats searched plan on bytes ({bh} < {b_search})"
+        assert t_search <= th * (1 + 1e-9), \
+            f"hand split {split} beats searched plan on predicted time"
+    best_hand = min(h.predicted_time() for h in hands)
+    row("graph_axpby_best_hand_us", best_hand * 1e6,
+        f"searched:{t_search * 1e6:.1f}us")
+
+    rep = plan_report(searched, N, f32)
+    row("graph_axpby_plan_report", 0.0,
+        f"parts:{rep['n_parts']}_slots:{rep['n_buffer_slots']}"
+        f"/{rep['n_buffer_values']}_speedup_bound:{rep['speedup_bound']:.2f}x")
+
+    # -- oracle equivalence on every shipped DAG shape ----------------------
+    for kind in C0_PIPELINES:
+        gk = c0_pipeline_graph(kind)
+        plan = partition(gk, model=TPU_V5E, n_elems=N)
+        args = _operands(gk, rng)
+        want = plan.ref(*args)
+        got = plan(*args, mode="interpret")
+        wants = want if isinstance(want, tuple) else (want,)
+        gots = got if isinstance(got, tuple) else (got,)
+        for w, o in zip(wants, gots):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(w),
+                                       rtol=1e-6, atol=1e-6)
+        row(f"graph_{kind}_oracle_match", 0.0,
+            f"parts:{plan.n_parts}/{len(gk.nodes)}nodes_ok")
+
+
+if __name__ == "__main__":
+    main()

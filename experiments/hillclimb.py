@@ -19,6 +19,15 @@ simulator (no dry-run compile needed):
 Hill-climbs (LLC block size ×2/÷2, DL1 block ×2/÷2, write-skip toggle)
 to minimise predicted time of each fused chain's trace; steps appended
 to experiments/perf/memhier_<preset>.md.
+
+Graph mode — plan-search autotune: partition the named c0 DAG pipelines
+(repro.graph) under a memhier preset, comparing all-unfused / greedy /
+beam plans by predicted time and modeled HBM bytes:
+
+    PYTHONPATH=src python experiments/hillclimb.py graph \
+        [preset] [pipeline ...]
+
+Results appended to experiments/perf/graph_<preset>.md.
 """
 import json
 import sys
@@ -120,13 +129,60 @@ def memhier_main(argv):
     print(hdr + "\n".join(rows))
 
 
+def graph_main(argv):
+    """Plan-search autotune: partition c0 DAG pipelines under a preset."""
+    import jax.numpy as jnp
+
+    from repro.graph import partition
+    from repro.kernels.ops import C0_PIPELINES, c0_pipeline_graph
+    from repro.memhier import PRESETS
+
+    preset, kinds = "tpu_v5e", list(argv)
+    if kinds and kinds[0] in PRESETS:
+        preset = kinds.pop(0)
+    kinds = kinds or list(C0_PIPELINES)
+    unknown = [k for k in kinds if k not in C0_PIPELINES]
+    if unknown:
+        raise SystemExit(f"unknown pipeline(s) {unknown}; "
+                         f"have {sorted(C0_PIPELINES)}; presets "
+                         f"{sorted(PRESETS)} must come first")
+    hier, n_elems, dtype = PRESETS[preset], 1 << 18, jnp.float32
+
+    os.makedirs("experiments/perf", exist_ok=True)
+    path = f"experiments/perf/graph_{preset}.md"
+    rows = []
+    for kind in kinds:
+        g = c0_pipeline_graph(kind)
+        results = []
+        for method in ("singletons", "greedy", "beam"):
+            plan = partition(g, model=hier, n_elems=n_elems, dtype=dtype,
+                             method=method)
+            results.append((method, plan, plan.predicted_time() * 1e6))
+        best = min(t for _, _, t in results)
+        for method, plan, t in results:
+            by = plan.modeled_hbm_bytes(n_elems, dtype)
+            chains = " ".join("-".join(map(str, c)) for c in plan.chains())
+            mark = " ◀" if t == best else ""
+            rows.append(f"| {kind} | {method} | `{chains}` | "
+                        f"{plan.n_parts} | {by} | {t:.2f}{mark} |")
+    hdr = ("| pipeline | method | chains | parts | modeled HBM B | "
+           "predicted us |\n|---|---|---|---:|---:|---:|\n")
+    with open(path, "a") as f:
+        f.write(hdr + "\n".join(rows) + "\n")
+    print(hdr + "\n".join(rows))
+
+
 def main():
     if len(sys.argv) < 2:
         raise SystemExit(
             "usage: hillclimb.py <arch> <shape> [tag=k:v,... ...]\n"
-            "       hillclimb.py memhier [preset] [chainA+chainB ...]")
+            "       hillclimb.py memhier [preset] [chainA+chainB ...]\n"
+            "       hillclimb.py graph [preset] [pipeline ...]")
     if sys.argv[1] == "memhier":
         memhier_main(sys.argv[2:])
+        return
+    if sys.argv[1] == "graph":
+        graph_main(sys.argv[2:])
         return
     if len(sys.argv) < 3:
         raise SystemExit("usage: hillclimb.py <arch> <shape> [tag=k:v,... ...]")

@@ -24,6 +24,13 @@ region: a named primitive with
 
 The registry's dispatch mode reproduces the paper's evaluation method:
 ``ref`` is the softcore *without* the SIMD unit, ``kernel`` is with it.
+
+Beyond single instructions, :meth:`Registry.fuse` compiles a linear
+chain into one reconfigurable region (the P'-type encoding below) — the
+trivial case of the :mod:`repro.graph` dataflow compiler, which
+partitions whole instruction DAGs into fused-region programs
+(DESIGN.md §11). Graph tracing hooks into dispatch via
+:func:`push_dispatch_hook`.
 """
 from __future__ import annotations
 
@@ -35,6 +42,22 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 
 from .stream import StreamConfig
+
+# Dispatch interception (LIFO). A hook is called as
+# ``hook(registry, name, operands, kwargs)`` before normal dispatch and
+# returns ``NotImplemented`` to decline; anything else short-circuits the
+# dispatch. The graph tracer (repro.graph.ir.Graph.trace) uses this to
+# record symbolic operands as DAG nodes instead of executing them.
+_DISPATCH_HOOKS: list = []
+
+
+def push_dispatch_hook(hook) -> None:
+    _DISPATCH_HOOKS.append(hook)
+
+
+def pop_dispatch_hook(hook) -> None:
+    _DISPATCH_HOOKS.remove(hook)
+
 
 # Operand ceilings from the encodings in Fig. 1 of the paper.
 ITYPE_LIMITS = {
@@ -113,6 +136,44 @@ class Instruction:
 
     def __call__(self, *operands, mode: Optional[str] = None, **kw):
         return _REGISTRY.dispatch(self.name, *operands, mode=mode, **kw)
+
+
+def fuse_chain(instrs: Sequence[Instruction], name: Optional[str] = None,
+               model: Any = None, vmem_budget: Optional[int] = None):
+    """Validate + compile one chain of registered instructions.
+
+    Returns ``(Program, OperandSpec)``: the fused single-pallas_call
+    program and its merged P'-type operand spec. Raises ValueError on
+    non-template instructions, incomposable chains (shape-changing or
+    arity-mismatched stages) and P'-budget overflows.
+
+    This is the shared chain primitive: :meth:`Registry.fuse` is its
+    trivial linear caller (errors propagate to the user), and the
+    :mod:`repro.graph` partitioner compiles every candidate chain
+    through it (errors mean "split here").
+    """
+    from .program import Program      # deferred: program is isa-free
+    instrs = tuple(instrs)
+    if not instrs:
+        raise ValueError("fuse_chain() needs at least one instruction")
+    for instr in instrs:
+        if instr.template is None:
+            raise ValueError(
+                f"{instr.name}: not fusable — no KernelTemplate "
+                f"registered (template-backed instructions only)")
+    kw: dict = {}
+    if model is not None:
+        kw["model"] = model
+    if vmem_budget is not None:
+        kw["vmem_budget"] = vmem_budget
+    prog = Program(tuple(i.template.stage() for i in instrs),
+                   name=name or "+".join(i.name for i in instrs), **kw)
+    # the merged external operand list IS the fused encoding: validate
+    # it against the widened P' budget (raises ValueError on exceed).
+    spec = OperandSpec(itype="P'", scalar_in=prog.n_scalar_in,
+                       scalar_out=0, vector_in=prog.n_ext_vec_in,
+                       vector_out=prog.n_vec_out)
+    return prog, spec
 
 
 @dataclasses.dataclass
@@ -217,23 +278,17 @@ class Registry:
         fuse() time if the chain doesn't compose (shape-changing stages,
         output/input arity mismatch) or if the merged external operand
         list exceeds the widened P'-type encoding budget.
+
+        This is the trivial linear case of the :mod:`repro.graph`
+        partitioner: one pre-decided chain, compiled by the same
+        :func:`fuse_chain` primitive the DAG search evaluates every
+        candidate chain with — here validation errors propagate; there
+        they mean "split the chain".
         """
-        from .program import Program      # deferred: program is isa-free
         if not names:
             raise ValueError("fuse() needs at least one instruction name")
         instrs = tuple(self.get(n) for n in names)
-        for instr in instrs:
-            if instr.template is None:
-                raise ValueError(
-                    f"{instr.name}: not fusable — no KernelTemplate "
-                    f"registered (template-backed instructions only)")
-        prog = Program(tuple(i.template.stage() for i in instrs),
-                       name=name or "+".join(names))
-        # the merged external operand list IS the fused encoding: validate
-        # it against the widened P' budget (raises ValueError on exceed).
-        spec = OperandSpec(itype="P'", scalar_in=prog.n_scalar_in,
-                           scalar_out=0, vector_in=prog.n_ext_vec_in,
-                           vector_out=prog.n_vec_out)
+        prog, spec = fuse_chain(instrs, name=name or "+".join(names))
         return FusedProgram(name=prog.name, spec=spec, instrs=instrs,
                             program=prog, registry=self)
 
@@ -282,6 +337,11 @@ class Registry:
         return mode
 
     def dispatch(self, name: str, *operands, mode: Optional[str] = None, **kw):
+        if _DISPATCH_HOOKS:
+            for hook in reversed(_DISPATCH_HOOKS):
+                res = hook(self, name, operands, dict(kw, mode=mode))
+                if res is not NotImplemented:
+                    return res
         instr = self.get(name)
         if len(operands) != instr.spec.n_inputs:
             raise TypeError(

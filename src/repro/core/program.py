@@ -27,6 +27,11 @@ The merged external operand list is the fused program's "encoding": it is
 validated against the widened P'-type budget in :mod:`repro.core.isa` at
 ``fuse()`` time (per-stage I'/S' limits were already enforced when each
 instruction registered).
+
+A Program is one *chain*; whole instruction DAGs are partitioned into
+chains by the :mod:`repro.graph` dataflow compiler (DESIGN.md §11),
+whose candidate chains are compiled through the same
+:func:`repro.core.isa.fuse_chain` primitive as ``fuse()``.
 """
 from __future__ import annotations
 

@@ -1,0 +1,20 @@
+"""repro.graph — dataflow-graph compiler over the instruction registry.
+
+The exploration loop the paper points at (§6): describe a computation as
+a DAG of registered SIMD instructions (:mod:`~repro.graph.ir`), search
+over partitions of that DAG into fused reconfigurable-region programs
+under the P'-type / VMEM / pipeline-depth budgets
+(:mod:`~repro.graph.partition`, scored by the :mod:`repro.memhier`
+simulator), and execute the winning :class:`~repro.graph.plan.Plan`
+with inter-program buffer reuse and a ``ref``-mode oracle
+(:mod:`~repro.graph.plan`). See DESIGN.md §11.
+"""
+from .ir import Graph, Node, Scalar, Value, chain_graph
+from .partition import fuse_chain, part_cost, partition, plan_from_chains
+from .plan import Part, Plan, build_plan
+
+__all__ = [
+    "Graph", "Node", "Part", "Plan", "Scalar", "Value", "build_plan",
+    "chain_graph", "fuse_chain", "part_cost", "partition",
+    "plan_from_chains",
+]

@@ -1,0 +1,306 @@
+"""Partition an instruction DAG into fused reconfigurable-region programs.
+
+A :class:`~repro.graph.ir.Graph` is covered with **chains** — paths the
+:class:`~repro.core.program.Program` layer can run as ONE ``pallas_call``
+(DESIGN.md §5's chaining rule: a stage's vector outputs feed the next
+stage's first vector inputs). A chain is legal iff
+
+  * every instruction is template-backed (it has a composable Stage);
+  * consecutive edges exist in the graph with the right slot positions;
+  * every internal value has exactly one consumer and is not a graph
+    output (a fanned-out value must materialise — it cannot be elided
+    into VMEM scratch);
+  * the merged external operand list fits the widened P'-type encoding
+    budget (:data:`~repro.core.isa.ITYPE_LIMITS`);
+  * one common block geometry fits the VMEM budget
+    (:meth:`Program.negotiate_geometry` succeeds);
+  * the chained pipeline depth stays within ``max_depth`` when given.
+
+:func:`repro.core.isa.fuse_chain` (re-exported here) packages that
+validation + Program construction; it is the primitive both
+``Registry.fuse`` (the trivial linear case — one pre-decided chain,
+errors propagate) and the partitioner (chains are *candidates*, errors
+mean "split here") are built on.
+
+Search: :func:`partition` runs a greedy baseline (extend the current
+chain whenever legal) and a beam search over the per-node
+extend-vs-cut decisions, scores partitions with the
+:mod:`repro.memhier` trace-driven simulator when a
+:class:`~repro.memhier.hierarchy.Hierarchy` is given (falling back to
+the analytic ``hbm_bytes_fused`` byte count otherwise), and returns the
+cheapest of {beam, greedy, all-singleton} — so the result is never worse
+than the all-unfused plan under the chosen cost model.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core.isa import fuse_chain  # noqa: F401 — re-exported API
+from repro.core.stream import VMEM_BYTES, _bits
+
+from .ir import Graph, Node
+from .plan import Part, Plan, build_plan
+
+# ---------------------------------------------------------------------------
+# chain legality inside a graph
+# ---------------------------------------------------------------------------
+
+class _Partitioner:
+    """Shared context for one partitioning run: graph, consumer map,
+    memoised chain compilation and cost evaluation."""
+
+    def __init__(self, graph: Graph, model=None, n_elems: int = 1 << 18,
+                 dtype=None, max_depth: Optional[int] = None,
+                 vmem_budget: int = VMEM_BYTES):
+        import jax.numpy as jnp
+        graph.validate()
+        self.graph = graph
+        if isinstance(model, str):        # memhier preset by name
+            from repro.memhier import PRESETS
+            try:
+                model = PRESETS[model]
+            except KeyError:
+                raise ValueError(
+                    f"unknown hierarchy preset {model!r}; have "
+                    f"{sorted(PRESETS)} (or pass a Hierarchy/BurstModel)"
+                ) from None
+        self.model = model
+        self.hier = model if _is_hierarchy(model) else None
+        self.n_elems = n_elems
+        self.dtype = dtype if dtype is not None else jnp.float32
+        self.max_depth = max_depth
+        self.vmem_budget = vmem_budget
+        self.cons = graph.consumers()
+        self._chains: dict[tuple[int, ...], Optional[Part]] = {}
+        self._costs: dict[tuple[int, ...], float] = {}
+
+    # -- chain compilation (memoised) ---------------------------------------
+    def part_for(self, nids: tuple[int, ...]) -> Optional[Part]:
+        """Compile a node-id chain to a Part, or None if illegal."""
+        if nids in self._chains:
+            return self._chains[nids]
+        part = self._compile(nids)
+        self._chains[nids] = part
+        return part
+
+    def _compile(self, nids: tuple[int, ...]) -> Optional[Part]:
+        nodes = [self.graph.nodes[i] for i in nids]
+        instrs = [self.graph.node_instr(nd) for nd in nodes]
+        if len(nodes) == 1:
+            # singletons are always representable: template-backed ones
+            # get a single-stage Program; the rest — and template ones
+            # whose Program cannot fit a geometry in the VMEM budget —
+            # dispatch directly as standalone instructions.
+            instr = instrs[0]
+            prog = None
+            if instr.template is not None:
+                prog, _ = fuse_chain(instrs, model=self.model,
+                                     vmem_budget=self.vmem_budget)
+                try:
+                    prog.negotiate_geometry(self.n_elems, self.dtype)
+                except ValueError:
+                    prog = None
+            return Part(node_ids=nids, nodes=tuple(nodes),
+                        instrs=tuple(instrs), program=prog, spec=instr.spec)
+        # graph-side legality: consecutive chain edges + exclusive use
+        for prev, nxt in zip(nodes, nodes[1:]):
+            k = prev.n_vec_out
+            if len(nxt.vec_in) < k:
+                return None
+            for j in range(k):
+                v = nxt.vec_in[j]
+                if v.nid != prev.nid or v.index != j:
+                    return None               # not the chain edge
+                if self.cons.get(v, []) != [(nxt.nid, j)]:
+                    return None               # fan-out / graph output
+        try:
+            prog, spec = fuse_chain(instrs, model=self.model,
+                                    vmem_budget=self.vmem_budget)
+        except ValueError:
+            return None                       # budget / composition
+        if self.max_depth is not None and prog.pipeline_depth() > self.max_depth:
+            return None
+        try:                                  # one geometry must fit VMEM
+            prog.negotiate_geometry(self.n_elems, self.dtype)
+        except ValueError:
+            return None
+        return Part(node_ids=nids, nodes=tuple(nodes), instrs=tuple(instrs),
+                    program=prog, spec=spec)
+
+    # -- cost model ----------------------------------------------------------
+    def cost(self, nids: tuple[int, ...]) -> float:
+        """Modeled cost of one part: memhier-predicted seconds when a
+        Hierarchy was given, analytic HBM bytes otherwise."""
+        if nids in self._costs:
+            return self._costs[nids]
+        part = self.part_for(nids)
+        assert part is not None, "cost() on an illegal chain"
+        c = part_cost(part, self.n_elems, self.dtype, self.hier)
+        self._costs[nids] = c
+        return c
+
+    def plan_cost(self, chains: Sequence[tuple[int, ...]]) -> float:
+        return sum(self.cost(c) for c in chains)
+
+    # -- searches ------------------------------------------------------------
+    def extension_candidate(self, node: Node) -> Optional[int]:
+        """The unique node id whose open chain this node could extend:
+        the producer of its first vector input (chain edges are
+        consecutive, so no other tail qualifies)."""
+        if not node.vec_in or node.vec_in[0].nid is None:
+            return None
+        return node.vec_in[0].nid
+
+    def greedy(self) -> list[tuple[int, ...]]:
+        """Extend the open chain ending at each node's producer whenever
+        the extended chain is legal; else start a singleton."""
+        open_by_tail: dict[int, tuple[int, ...]] = {}
+        closed: list[tuple[int, ...]] = []
+        for node in self.graph.nodes:
+            tail = self.extension_candidate(node)
+            if tail is not None and tail in open_by_tail:
+                ext = open_by_tail[tail] + (node.nid,)
+                if self.part_for(ext) is not None:
+                    del open_by_tail[tail]
+                    open_by_tail[node.nid] = ext
+                    continue
+            open_by_tail[node.nid] = (node.nid,)
+        closed.extend(open_by_tail.values())
+        return sorted(closed, key=lambda c: c[-1])
+
+    def beam(self, width: int = 8) -> list[tuple[int, ...]]:
+        """Beam search over the per-node extend-vs-cut decisions.
+
+        A state is the set of chains built so far (any chain whose tail
+        is still the latest node of its path remains open). Scored by
+        the summed part cost; ties keep fewer parts.
+        """
+        states: list[dict[int, tuple[int, ...]]] = [{}]   # tail nid → chain
+        for node in self.graph.nodes:
+            nxt: list[dict[int, tuple[int, ...]]] = []
+            for st in states:
+                # choice 1: start a singleton
+                s1 = dict(st)
+                s1[node.nid] = (node.nid,)
+                nxt.append(s1)
+                # choice 2: extend the producer's open chain, if legal
+                tail = self.extension_candidate(node)
+                if tail is not None and tail in st:
+                    ext = st[tail] + (node.nid,)
+                    if self.part_for(ext) is not None:
+                        s2 = dict(st)
+                        del s2[tail]
+                        s2[node.nid] = ext
+                        nxt.append(s2)
+            # dedupe states (different decision orders can converge)
+            uniq: dict[tuple, dict[int, tuple[int, ...]]] = {}
+            for st in nxt:
+                uniq[tuple(sorted(st.values()))] = st
+            scored = sorted(
+                uniq.values(),
+                key=lambda st: (self.plan_cost(tuple(st.values())), len(st)))
+            states = scored[:max(1, width)]
+        best = states[0]
+        return sorted(best.values(), key=lambda c: c[-1])
+
+    def singletons(self) -> list[tuple[int, ...]]:
+        return [(nd.nid,) for nd in self.graph.nodes]
+
+
+def _is_hierarchy(model) -> bool:
+    if model is None:
+        return False
+    from repro.core.burst_model import BurstModel
+    return not isinstance(model, BurstModel)
+
+
+def part_cost(part: Part, n_elems: int, dtype, hier=None) -> float:
+    """Cost of one part under the chosen model (lower is better).
+
+    With a Hierarchy: memhier-predicted seconds of the part's trace
+    (fused intermediates elided; non-template singletons priced as a
+    plain ``n_in``-read / ``n_out``-write stream). Without: the analytic
+    HBM byte count — the ``hbm_bytes_fused`` fallback.
+    """
+    if hier is not None:
+        from repro.memhier.predict import predict_program, stream_bandwidth
+        if part.program is not None:
+            return predict_program(hier, part.program, n_elems, dtype).time_s
+        spec = part.spec
+        return stream_bandwidth(hier, n_elems * _bits(dtype) // 8,
+                                n_read=spec.vector_in,
+                                n_write=spec.vector_out).time_s
+    return float(part.hbm_bytes(n_elems, dtype))
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def partition(graph: Graph, *, model=None, n_elems: int = 1 << 18,
+              dtype=None, method: str = "beam", beam_width: int = 8,
+              max_depth: Optional[int] = None,
+              vmem_budget: int = VMEM_BYTES) -> Plan:
+    """Partition ``graph`` into an executable :class:`Plan`.
+
+    model:      a :class:`repro.memhier.hierarchy.Hierarchy` (or a
+                preset name like ``"tpu_v5e"``) → chains are scored by
+                the trace-driven simulator and each Part's Program
+                negotiates its geometry against it; ``None`` or a
+                :class:`BurstModel` → analytic ``hbm_bytes_fused`` cost.
+    method:     "beam" (default), "greedy", or "singletons" (the
+                all-unfused counterfactual). Beam and greedy results are
+                both compared against the all-singleton plan and the
+                cheapest wins — the searched plan is never worse than
+                all-unfused under the chosen cost model.
+    n_elems / dtype: representative operand size for cost evaluation and
+                the VMEM-fit check (defaults: 2^18 elements of float32).
+    max_depth:  optional ceiling on a chain's summed pipeline depth.
+    """
+    ctx = _Partitioner(graph, model=model, n_elems=n_elems, dtype=dtype,
+                       max_depth=max_depth, vmem_budget=vmem_budget)
+    if method == "singletons":
+        chains = ctx.singletons()
+    elif method == "greedy":
+        candidates = [ctx.greedy(), ctx.singletons()]
+        chains = min(candidates, key=ctx.plan_cost)
+    elif method == "beam":
+        candidates = [ctx.beam(beam_width), ctx.greedy(), ctx.singletons()]
+        chains = min(candidates, key=ctx.plan_cost)
+    else:
+        raise ValueError(f"unknown method {method!r}; "
+                         f"have beam | greedy | singletons")
+    parts = [ctx.part_for(tuple(c)) for c in chains]
+    assert all(p is not None for p in parts)
+    return build_plan(graph, parts, cost=ctx.plan_cost(chains),
+                      n_elems=n_elems, dtype=ctx.dtype, hierarchy=ctx.hier,
+                      method=method)
+
+
+def plan_from_chains(graph: Graph, chains: Sequence[Sequence[int]], *,
+                     model=None, n_elems: int = 1 << 18, dtype=None,
+                     vmem_budget: int = VMEM_BYTES) -> Plan:
+    """Build a Plan from a hand-written chain split (node-id lists).
+
+    Raises ValueError if the chains don't exactly cover the graph or any
+    chain is illegal — this is the "hand-written linear-chain split"
+    baseline the searched plan is gated against.
+    """
+    ctx = _Partitioner(graph, model=model, n_elems=n_elems, dtype=dtype,
+                       vmem_budget=vmem_budget)
+    seen: list[int] = []
+    parts = []
+    norm = [tuple(int(i) for i in c) for c in chains]
+    for c in norm:
+        seen.extend(c)
+        part = ctx.part_for(c)
+        if part is None:
+            raise ValueError(f"{graph.name}: chain {c} is not a legal "
+                             f"fused program for this graph")
+        parts.append(part)
+    if sorted(seen) != list(range(len(graph.nodes))):
+        raise ValueError(f"{graph.name}: chains {norm} do not exactly "
+                         f"cover nodes 0..{len(graph.nodes) - 1}")
+    return build_plan(graph, parts, cost=ctx.plan_cost(norm),
+                      n_elems=n_elems, dtype=ctx.dtype, hierarchy=ctx.hier,
+                      method="manual")

@@ -1,0 +1,271 @@
+"""Executable partition plans: ordered fused programs + buffer reuse.
+
+A :class:`Plan` is what :func:`repro.graph.partition.partition` returns:
+the graph's nodes covered by :class:`Part`\\ s (each a fused
+:class:`~repro.core.program.Program` or a direct-dispatch singleton),
+topologically ordered, with a linear-scan buffer-slot assignment for the
+materialised inter-program values (graph inputs and part outputs): a
+value's slot is recycled once its last consuming part has run, so the
+peak number of live inter-program buffers — ``n_slots`` — is what an
+allocator must provision, not one buffer per value. Execution mirrors
+the assignment by dropping dead values from the environment, letting the
+runtime reuse their storage.
+
+Dispatch honours the registry modes (DESIGN.md §1): ``ref`` runs the
+graph node-by-node through the registered oracles — the end-to-end
+correctness oracle every emitted Plan is validated against; ``kernel`` /
+``interpret`` run the parts' single-``pallas_call`` programs (simulated
+on CPU for interpret); ``auto`` picks kernel iff on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+
+from repro.core.stream import _bits
+
+from .ir import Graph, Node, Scalar, Value
+
+
+@dataclasses.dataclass
+class Part:
+    """One partition element: a chain of graph nodes run as one program.
+
+    ``program`` is the fused (or single-stage) Program for
+    template-backed chains; ``None`` means a non-template singleton that
+    dispatches through the registry like any standalone instruction.
+    ``spec`` is the merged P'-type operand spec (the instruction's own
+    spec for singletons).
+    """
+
+    node_ids: tuple[int, ...]
+    nodes: tuple[Node, ...]
+    instrs: tuple[Any, ...]
+    program: Optional[Any]
+    spec: Any
+
+    @property
+    def name(self) -> str:
+        return "+".join(nd.name for nd in self.nodes)
+
+    @property
+    def last(self) -> Node:
+        return self.nodes[-1]
+
+    def external_vec_values(self) -> list[Value]:
+        """The vector Values this part reads from outside itself, in
+        program operand order (per node: non-chained vector inputs)."""
+        ext: list[Value] = []
+        for i, node in enumerate(self.nodes):
+            k = self.nodes[i - 1].n_vec_out if i else 0
+            ext.extend(node.vec_in[k:])
+        return ext
+
+    def hbm_bytes(self, n_elems: int, dtype) -> int:
+        """Modeled HBM traffic of this part: externals + outputs only for
+        fused programs, all operands for direct-dispatch singletons."""
+        if self.program is not None:
+            return self.program.hbm_bytes_fused(n_elems, dtype)
+        per = self.spec.vector_in + self.spec.vector_out
+        return per * n_elems * _bits(dtype) // 8
+
+    def pipeline_depth(self) -> int:
+        if self.program is not None:
+            return self.program.pipeline_depth()
+        return self.instrs[0].pipeline_depth
+
+
+@dataclasses.dataclass
+class Plan:
+    """Topologically ordered parts + the buffer-slot assignment."""
+
+    graph: Graph
+    parts: tuple[Part, ...]
+    slot_of: dict[Value, int]
+    n_slots: int
+    n_values: int
+    cost: float                      # under the partitioner's cost model
+    n_elems: int                     # representative size cost was taken at
+    dtype: Any
+    hierarchy: Optional[Any] = None  # memhier Hierarchy when one scored it
+    method: str = "beam"
+
+    # -- bookkeeping ---------------------------------------------------------
+    @property
+    def n_parts(self) -> int:
+        return len(self.parts)
+
+    @property
+    def n_fused_nodes(self) -> int:
+        return sum(len(p.nodes) for p in self.parts if len(p.nodes) > 1)
+
+    def chains(self) -> list[tuple[int, ...]]:
+        return [p.node_ids for p in self.parts]
+
+    def modeled_hbm_bytes(self, n_elems: Optional[int] = None,
+                          dtype=None) -> int:
+        n = n_elems if n_elems is not None else self.n_elems
+        dt = dtype if dtype is not None else self.dtype
+        return sum(p.hbm_bytes(n, dt) for p in self.parts)
+
+    def predicted_time(self, hierarchy=None, n_elems: Optional[int] = None,
+                       dtype=None) -> float:
+        """memhier-predicted seconds, summed over parts (parts run as
+        separate pallas_calls, so they serialise)."""
+        from .partition import part_cost
+        hier = hierarchy if hierarchy is not None else self.hierarchy
+        if hier is None:
+            raise ValueError("predicted_time needs a Hierarchy (none was "
+                             "used to build this plan)")
+        n = n_elems if n_elems is not None else self.n_elems
+        dt = dtype if dtype is not None else self.dtype
+        return sum(part_cost(p, n, dt, hier) for p in self.parts)
+
+    def describe(self) -> str:
+        lines = [f"Plan({self.graph.name}, method={self.method}): "
+                 f"{len(self.parts)} parts / {len(self.graph.nodes)} nodes, "
+                 f"{self.n_slots} buffer slots for {self.n_values} values"]
+        for p in self.parts:
+            kind = "fused" if len(p.nodes) > 1 else (
+                "single" if p.program is not None else "dispatch")
+            lines.append(f"  [{kind}] {p.name}  nodes={list(p.node_ids)}")
+        return "\n".join(lines)
+
+    # -- execution -----------------------------------------------------------
+    def _bind(self, operands):
+        free = self.graph.free_inputs()
+        if len(operands) != len(free):
+            names = [n for n, _ in free]
+            raise TypeError(
+                f"{self.graph.name}: plan expects {len(free)} operands "
+                f"{names}, got {len(operands)}")
+        env: dict[Value, Any] = {}
+        scal: dict[Scalar, Any] = {}
+        for (_, key), op in zip(free, operands):
+            if isinstance(key, Value):
+                env[key] = op
+            else:
+                scal[key] = op
+        for s in self.graph.scalars:
+            if s.bound is not None:
+                scal[s] = s.bound
+        return env, scal
+
+    def _outputs(self, vals):
+        outs = tuple(vals[v] for v in self.graph.outputs)
+        return outs[0] if len(outs) == 1 else outs
+
+    def ref(self, *operands):
+        """The end-to-end oracle: run the DAG node-by-node through the
+        registered ``ref`` implementations, ignoring the partitioning."""
+        env, scal = self._bind(operands)
+        vals = dict(env)
+        for node in self.graph.nodes:
+            ops = [vals[o] if isinstance(o, Value) else scal[o]
+                   for o in node.operands]
+            res = self.graph.registry.dispatch(node.name, *ops, mode="ref")
+            outs = res if isinstance(res, tuple) else (res,)
+            for i, r in enumerate(outs):
+                vals[Value(self.graph.gid, node.nid, i)] = r
+        return self._outputs(vals)
+
+    def __call__(self, *operands, mode: Optional[str] = None):
+        reg = self.graph.registry
+        mode = mode or reg.mode
+        if mode not in reg.MODES:
+            raise ValueError(f"mode must be one of {reg.MODES}")
+        if mode == "auto":
+            mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+        if mode == "ref":
+            return self.ref(*operands)
+        env, scal = self._bind(operands)
+        vals = dict(env)
+        dies = _death_schedule(self.graph, self.parts)
+        for idx, part in enumerate(self.parts):
+            if part.program is not None:
+                ops: list[Any] = []
+                for i, node in enumerate(part.nodes):
+                    k = part.nodes[i - 1].n_vec_out if i else 0
+                    ops.extend(scal[s] for s in node.scalar_in)
+                    ops.extend(vals[v] for v in node.vec_in[k:])
+                out = part.program(*ops, interpret=(mode == "interpret"))
+            else:
+                node = part.nodes[0]
+                ops = [vals[o] if isinstance(o, Value) else scal[o]
+                       for o in node.operands]
+                out = reg.dispatch(node.name, *ops, mode=mode)
+            outs = out if isinstance(out, tuple) else (out,)
+            for i, r in enumerate(outs):
+                vals[Value(self.graph.gid, part.last.nid, i)] = r
+            # buffer reuse: drop values whose last consumer has run so
+            # their storage is reclaimable (mirrors the slot assignment).
+            for v in dies.get(idx, ()):
+                vals.pop(v, None)
+        return self._outputs(vals)
+
+
+# ---------------------------------------------------------------------------
+# plan construction
+# ---------------------------------------------------------------------------
+
+def _death_schedule(graph: Graph,
+                    parts: Sequence[Part]) -> dict[int, list[Value]]:
+    """Part index → materialised values whose last use is that part
+    (graph outputs never die)."""
+    last_use: dict[Value, int] = {}
+    for idx, part in enumerate(parts):
+        for v in part.external_vec_values():
+            last_use[v] = max(last_use.get(v, -1), idx)
+    alive = set(graph.outputs)
+    return_schedule: dict[int, list[Value]] = {}
+    for v, idx in last_use.items():
+        if v not in alive:
+            return_schedule.setdefault(idx, []).append(v)
+    return return_schedule
+
+
+def _assign_slots(graph: Graph, parts: Sequence[Part]):
+    """Linear-scan slot allocation over the materialised values.
+
+    Inputs are live from the start; each part's last-node outputs
+    allocate at its index; a slot frees once its value's last consuming
+    part has run (graph outputs never free). Returns (slot_of, n_slots,
+    n_values).
+    """
+    dies = _death_schedule(graph, parts)
+    slot_of: dict[Value, int] = {}
+    free: list[int] = []
+    n_slots = 0
+
+    def alloc(v: Value) -> None:
+        nonlocal n_slots
+        if free:
+            slot_of[v] = free.pop()
+        else:
+            slot_of[v] = n_slots
+            n_slots += 1
+
+    for v in graph.inputs:
+        alloc(v)
+    for idx, part in enumerate(parts):
+        for i in range(part.last.n_vec_out):
+            alloc(Value(graph.gid, part.last.nid, i))
+        for v in dies.get(idx, ()):
+            free.append(slot_of[v])
+    return slot_of, n_slots, len(slot_of)
+
+
+def build_plan(graph: Graph, parts: Sequence[Part], *, cost: float,
+               n_elems: int, dtype, hierarchy=None,
+               method: str = "beam") -> Plan:
+    """Order parts topologically (chains ascend in node id, and every
+    cross-part value is produced by a part's LAST node, so sorting by
+    last node id is a valid schedule), then assign buffer slots."""
+    ordered = tuple(sorted(parts, key=lambda p: p.node_ids[-1]))
+    slot_of, n_slots, n_values = _assign_slots(graph, ordered)
+    return Plan(graph=graph, parts=ordered, slot_of=slot_of,
+                n_slots=n_slots, n_values=n_values, cost=cost,
+                n_elems=n_elems, dtype=dtype, hierarchy=hierarchy,
+                method=method)

@@ -60,9 +60,21 @@ def extrapolated_costs(cfg, shape, mesh, grad_accum: int):
     return tuple(total), tuple(outside_v), tuple(body_v)
 
 
+def _resolve_hierarchy(hierarchy):
+    """None/"flat" → the flat bytes/peak term; a preset name or a
+    repro.memhier Hierarchy → the trace-driven burst-aware term."""
+    if hierarchy in (None, "flat"):
+        return None
+    if isinstance(hierarchy, str):
+        from repro.memhier import PRESETS
+        return PRESETS[hierarchy]
+    return hierarchy
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              outdir: str = "experiments/dryrun", grad_accum: int = 0,
-             overrides: dict | None = None, verbose: bool = True):
+             overrides: dict | None = None, verbose: bool = True,
+             hierarchy: str | None = "tpu_v5e"):
     from repro.configs import SHAPES, cell_applicable, get_config
     from repro.launch import api
     from repro.launch.mesh import make_production_mesh, mesh_name
@@ -112,7 +124,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     rep.flops_per_chip = flops
     rep.hbm_bytes_per_chip = hbm
     rep.coll_bytes_per_chip = coll
-    rep.terms = roofline_terms(flops, hbm, coll)
+    # memory term: the memhier burst-aware prediction (DMA issue overhead
+    # at the hierarchy's block size) instead of the flat bytes/peak law,
+    # unless --hierarchy flat asked for the legacy term.
+    rep.terms = roofline_terms(flops, hbm, coll,
+                               hierarchy=_resolve_hierarchy(hierarchy))
     rep.useful_ratio = (model_flops / (flops * n_chips)) if flops else 0.0
 
     if verbose:
@@ -141,6 +157,9 @@ def main(argv=None):
     p.add_argument("--multi-pod", action="store_true")
     p.add_argument("--grad-accum", type=int, default=0)
     p.add_argument("--outdir", default="experiments/dryrun")
+    p.add_argument("--hierarchy", default="tpu_v5e",
+                   help="memhier preset for the roofline memory term "
+                        "('flat' = legacy bytes/peak)")
     p.add_argument("--set", action="append", default=[],
                    help="config override key=value (e.g. attn_impl=chunked)")
     args = p.parse_args(argv)
@@ -169,7 +188,8 @@ def main(argv=None):
     for a, s in cells:
         try:
             run_cell(a, s, args.multi_pod, args.outdir,
-                     grad_accum=args.grad_accum, overrides=overrides)
+                     grad_accum=args.grad_accum, overrides=overrides,
+                     hierarchy=args.hierarchy)
         except Exception as e:  # noqa: BLE001 — report all cell failures
             failures.append((a, s, repr(e)))
             print(f"FAIL {a} × {s}: {e}")

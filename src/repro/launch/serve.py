@@ -21,6 +21,13 @@ from repro.models import model as M
 from repro.models.params import abstract_params, logical_axes
 
 
+def grow_cache_fn(cfg, prefill_len, capacity):
+    """Close over the static sizes so the cache growth can be jitted."""
+    def f(cache):
+        return M.grow_cache(cfg, cache, prefill_len, capacity)
+    return f
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="llama3-8b")
@@ -57,8 +64,7 @@ def main(argv=None):
 
         t0 = time.time()
         logits, cache = prefill(params, {"tokens": prompts})
-        cache = jax.jit(functools_grow(cfg, args.prompt_len, capacity)
-                        )(cache) if True else cache
+        cache = jax.jit(grow_cache_fn(cfg, args.prompt_len, capacity))(cache)
         jax.block_until_ready(logits)
         t_prefill = time.time() - t0
         print(f"prefill {args.batch}×{args.prompt_len} in "
@@ -89,12 +95,6 @@ def sample(logits, rng, temperature):
         return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
     return jax.random.categorical(
         rng, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
-
-
-def functools_grow(cfg, prefill_len, capacity):
-    def f(cache):
-        return M.grow_cache(cfg, cache, prefill_len, capacity)
-    return f
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ The trace-driven engine that runs a hierarchy lives in
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.core.burst_model import BurstModel, PAPER_AXI, TPU_V5E_HBM
 from repro.core.stream import VMEM_BYTES
@@ -56,6 +57,16 @@ class CacheLevel:
     hit_latency_s:
         per-access latency; streaming pipelines mostly hide it, so the
         presets keep it small but it participates in busy time.
+    n_ways:
+        set associativity: blocks per set, with set-indexed LRU
+        replacement inside each set — so reuse-heavy traces pay conflict
+        misses when hot lines collide on a set. ``None`` (the default)
+        keeps the level fully associative, the pre-associativity
+        behaviour. ``1`` is direct-mapped. When ``n_ways`` does not
+        divide ``n_blocks``, the remainder blocks are unreachable (the
+        modeled capacity is ``n_sets * n_ways``, as in real hardware
+        where sets × ways defines the cache) — prefer geometries where
+        it divides.
     """
 
     name: str
@@ -65,6 +76,7 @@ class CacheLevel:
     hit_latency_s: float = 0.0
     write_allocate: bool = True
     full_block_write_skips_fetch: bool = True
+    n_ways: Optional[int] = None
 
     def __post_init__(self):
         if self.block_bytes <= 0:
@@ -75,10 +87,29 @@ class CacheLevel:
                 f"{self.block_bytes}-byte block")
         if self.bandwidth <= 0:
             raise ValueError(f"{self.name}: bandwidth must be positive")
+        if self.n_ways is not None and self.n_ways <= 0:
+            raise ValueError(f"{self.name}: n_ways must be positive "
+                             f"(None = fully associative)")
 
     @property
     def n_blocks(self) -> int:
         return self.capacity_bytes // self.block_bytes
+
+    @property
+    def n_sets(self) -> int:
+        """Sets the block index hashes over (1 = fully associative)."""
+        if self.n_ways is None:
+            return 1
+        return max(1, self.n_blocks // self.n_ways)
+
+    @property
+    def ways(self) -> int:
+        """Blocks per set the replacement policy manages (capacity-clamped
+        so geometry edits like :meth:`Hierarchy.with_llc_block` cannot
+        oversubscribe a shrunken level)."""
+        if self.n_ways is None:
+            return self.n_blocks
+        return min(self.n_ways, self.n_blocks)
 
     @property
     def sub_bytes(self) -> int:

@@ -17,7 +17,10 @@ effective bandwidth collapses to the Fig. 3 burst law at the LLC block
 size — that is the validation gate in ``benchmarks/bench_blocksweep.py``.
 
 Approximations (documented, deliberate):
-  * fully-associative LRU per level (no set conflicts);
+  * LRU replacement per set (``CacheLevel.n_ways`` sets the
+    associativity; the ``n_ways=None`` default is fully associative —
+    no conflict misses; a non-dividing ``n_ways`` models only
+    ``n_sets * n_ways`` blocks of the declared capacity);
   * a write covering whole sub-blocks allocates without tracking partial
     validity (§3.1.3 valid bits are assumed to work);
   * ``hit_latency_s`` charges busy time but not dependent-access latency
@@ -127,8 +130,15 @@ class _LevelSim:
     def __init__(self, level: CacheLevel, below):
         self.level = level
         self.below = below
-        self.lines: OrderedDict[int, bool] = OrderedDict()   # addr -> dirty
+        # one LRU per set (n_sets == 1 → fully associative, the default).
+        self.sets: list[OrderedDict[int, bool]] = [
+            OrderedDict() for _ in range(level.n_sets)]   # line addr -> dirty
+        self.ways = level.ways
         self.stats = LevelStats(name=level.name)
+
+    def _set(self, la: int) -> OrderedDict:
+        """Set-indexed placement: the block index hashes over the sets."""
+        return self.sets[(la // self.level.block_bytes) % len(self.sets)]
 
     def _chunks(self, addr: int, nbytes: int):
         """Split an access into (chunk_addr, chunk_bytes, line_addr)."""
@@ -142,9 +152,10 @@ class _LevelSim:
             a += csize
 
     def _insert(self, la: int, dirty: bool) -> None:
-        self.lines[la] = dirty
-        if len(self.lines) > self.level.n_blocks:
-            old, was_dirty = self.lines.popitem(last=False)
+        lines = self._set(la)
+        lines[la] = dirty
+        if len(lines) > self.ways:
+            old, was_dirty = lines.popitem(last=False)
             if was_dirty:
                 self.stats.writeback_bytes += self.level.block_bytes
                 self.below.write(old, self.level.block_bytes)
@@ -153,9 +164,10 @@ class _LevelSim:
         self.stats.read_bytes += nbytes
         B = self.level.block_bytes
         for _, _, la in self._chunks(addr, nbytes):
-            if la in self.lines:
+            lines = self._set(la)
+            if la in lines:
                 self.stats.hits += 1
-                self.lines.move_to_end(la)
+                lines.move_to_end(la)
             else:
                 self.stats.misses += 1
                 self.below.read(la, B)
@@ -167,10 +179,11 @@ class _LevelSim:
         B = self.level.block_bytes
         sub = self.level.sub_bytes
         for a, csize, la in self._chunks(addr, nbytes):
-            if la in self.lines:
+            lines = self._set(la)
+            if la in lines:
                 self.stats.hits += 1
-                self.lines[la] = True
-                self.lines.move_to_end(la)
+                lines[la] = True
+                lines.move_to_end(la)
                 continue
             self.stats.misses += 1
             covers_subs = (a % sub == 0) and (csize % sub == 0)
@@ -214,11 +227,12 @@ def simulate(hier: Hierarchy, trace: Iterable[Access]) -> Prediction:
     # flush: dirty lines eventually drain to DRAM; charge them now so a
     # write stream's traffic is not hidden by the finite trace.
     for sim in sims:
-        for la, dirty in sim.lines.items():
-            if dirty:
-                sim.stats.writeback_bytes += sim.level.block_bytes
-                sim.below.write(la, sim.level.block_bytes)
-        sim.lines.clear()
+        for lines in sim.sets:
+            for la, dirty in lines.items():
+                if dirty:
+                    sim.stats.writeback_bytes += sim.level.block_bytes
+                    sim.below.write(la, sim.level.block_bytes)
+            lines.clear()
         sim.finish()
 
     busy = {st.stats.name: st.stats.busy_s for st in sims}

@@ -188,6 +188,40 @@ def program_fusion_report(program, n_elems: int, dtype,
                          program.hbm_bytes_unfused(n_elems, dtype), hw)
 
 
+def plan_report(plan, n_elems: int, dtype, hw: dict = HW_V5E,
+                hierarchy=None) -> dict:
+    """fusion_report for a partitioned :class:`repro.graph.plan.Plan`.
+
+    ``fused`` is the plan's modeled HBM traffic (each part moves only its
+    external operands), ``unfused`` the all-singleton counterfactual of
+    the same graph. On top of the roofline terms it reports the plan's
+    shape (parts, fused nodes, buffer-slot reuse) and — when a
+    :mod:`repro.memhier` Hierarchy is given or was used to build the
+    plan — the simulator-predicted seconds of both executions.
+    """
+    g = plan.graph
+    fused_bytes = plan.modeled_hbm_bytes(n_elems, dtype)
+    unfused_bytes = g.hbm_bytes_unfused(n_elems, dtype)
+    rep = fusion_report(g.flops(n_elems), fused_bytes, unfused_bytes, hw)
+    rep.update(
+        n_nodes=len(g.nodes),
+        n_parts=plan.n_parts,
+        n_fused_nodes=plan.n_fused_nodes,
+        chains=[list(c) for c in plan.chains()],
+        n_buffer_slots=plan.n_slots,
+        n_buffer_values=plan.n_values,
+    )
+    hier = hierarchy if hierarchy is not None else plan.hierarchy
+    if hier is not None:
+        from repro.graph.partition import partition   # deferred: no cycle
+        t_plan = plan.predicted_time(hier, n_elems, dtype)
+        t_unf = partition(g, model=hier, n_elems=n_elems, dtype=dtype,
+                          method="singletons").predicted_time()
+        rep.update(predicted_s=t_plan, predicted_unfused_s=t_unf,
+                   predicted_speedup=t_unf / t_plan if t_plan else float("inf"))
+    return rep
+
+
 @dataclasses.dataclass
 class CellReport:
     arch: str

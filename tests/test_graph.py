@@ -1,0 +1,356 @@
+"""repro.graph — dataflow IR, partitioner, and executable plans (ISSUE 3).
+
+Covers IR construction/validation/tracing, chain legality inside a DAG
+(fan-out, slot positions, budgets), the greedy/beam searches and their
+never-worse-than-unfused gate, buffer-slot reuse, and the acceptance
+criterion that every emitted Plan matches its ref-mode oracle in
+interpret mode — including the partitioner edge cases: single-node
+graphs, graphs exceeding every budget (all-singleton plan), and
+diamond-shaped reuse.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401 — registers the ISA
+from repro.core import isa
+from repro.graph import (Graph, chain_graph, fuse_chain, partition,
+                         plan_from_chains)
+from repro.kernels import ops
+from repro.memhier import TPU_V5E
+
+F32 = jnp.float32
+
+
+def _rand(n, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(n), F32)
+
+
+def axpby_graph():
+    """0=scale, 1=add, 2=copy (chain), 3=triad (branch, shared inputs)."""
+    return ops.c0_pipeline_graph("axpby_residual")
+
+
+def assert_plan_matches_oracle(plan, *operands):
+    want = plan.ref(*operands)
+    got = plan(*operands, mode="interpret")
+    wants = want if isinstance(want, tuple) else (want,)
+    gots = got if isinstance(got, tuple) else (got,)
+    assert len(wants) == len(gots)
+    for w, o in zip(wants, gots):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(w),
+                                   rtol=1e-6, atol=1e-6)
+
+
+class TestIR:
+    def test_apply_validates_against_registry(self):
+        g = Graph("t")
+        x = g.input("x")
+        with pytest.raises(KeyError, match="unknown instruction"):
+            g.apply("c9_nope", x)
+        with pytest.raises(ValueError, match="vector"):
+            g.apply("c0_add", x)            # needs 2 vector operands
+
+    def test_literal_scalars_become_bound_inputs(self):
+        g = Graph("t")
+        x = g.input("x")
+        g.output(g.apply("c0_scale", x, 2.5))
+        assert len(g.scalars) == 1 and g.scalars[0].bound == 2.5
+        assert len(g.free_inputs()) == 1    # only the vector remains free
+
+    def test_values_cannot_cross_graphs(self):
+        g1, g2 = Graph("a"), Graph("b")
+        x = g1.input("x")
+        with pytest.raises(ValueError, match="different graph"):
+            g2.apply("c0_copy", x)
+
+    def test_kwargs_rejected(self):
+        g = Graph("t")
+        x = g.input("x")
+        with pytest.raises(TypeError, match="keyword"):
+            g.apply("c2_sort", x, width=8)
+
+    def test_validate_needs_outputs(self):
+        g = Graph("t")
+        g.apply("c0_copy", g.input("x"))
+        with pytest.raises(ValueError, match="no outputs"):
+            g.validate()
+
+    def test_consumers_counts_fanout_and_outputs(self):
+        g = ops.c0_pipeline_graph("diamond")
+        cons = g.consumers()
+        a = g.nodes[1].vec_in[0]            # scale's output feeds copy+add
+        assert len(cons[a]) == 2
+
+    def test_chain_graph_matches_fuse_operand_spec(self):
+        g = chain_graph(["c0_scale", "c0_add"])
+        fused = isa.fuse("c0_scale", "c0_add")
+        assert len(g.nodes) == 2
+        assert len(g.inputs) == fused.spec.vector_in
+        assert len(g.scalars) == fused.spec.scalar_in
+
+
+class TestTracing:
+    def test_trace_records_ops_wrappers(self):
+        with Graph.trace("tr") as g:
+            x, b = g.input("x"), g.input("b")
+            g.output(ops.stream_add(ops.stream_scale(x, 2.0), b))
+        assert [n.name for n in g.nodes] == ["c0_scale", "c0_add"]
+        plan = partition(g)
+        assert_plan_matches_oracle(plan, _rand(512), _rand(512, 1))
+
+    def test_trace_leaves_concrete_dispatch_alone(self):
+        x = _rand(64)
+        with Graph.trace("tr") as g:
+            del g
+            y = ops.stream_scale(x, 2.0, mode="ref")   # concrete → executes
+        np.testing.assert_allclose(np.asarray(y), np.asarray(2.0 * x))
+
+    def test_trace_hook_removed_after_context(self):
+        with Graph.trace("tr") as g:
+            g.output(g.apply("c0_copy", g.input("x")))
+        assert not isa._DISPATCH_HOOKS
+
+
+class TestPartitionerEdgeCases:
+    def test_single_node_graph(self):
+        g = Graph("one")
+        g.output(g.apply("c0_copy", g.input("x")))
+        plan = partition(g, model=TPU_V5E)
+        assert plan.n_parts == 1 and plan.parts[0].node_ids == (0,)
+        assert_plan_matches_oracle(plan, _rand(300))
+
+    def test_every_budget_exceeded_yields_all_singletons(self):
+        # VMEM budget too small for any fused pair OR any single-stage
+        # Program: singletons must still be emitted (falling back to
+        # direct dispatch) and the plan must still execute.
+        g = axpby_graph()
+        plan = partition(g, vmem_budget=1024)
+        assert plan.n_parts == len(g.nodes)
+        assert all(len(p.node_ids) == 1 for p in plan.parts)
+        assert all(p.program is None for p in plan.parts)
+        assert_plan_matches_oracle(plan, _rand(128), _rand(128, 1), 2.0, 0.5)
+
+    def test_hierarchy_preset_accepted_by_name(self):
+        g = axpby_graph()
+        by_name = partition(g, model="tpu_v5e")
+        by_obj = partition(g, model=TPU_V5E)
+        assert by_name.chains() == by_obj.chains()
+        assert by_name.predicted_time() == pytest.approx(
+            by_obj.predicted_time())
+        with pytest.raises(ValueError, match="unknown hierarchy preset"):
+            partition(g, model="tpu_v9000")
+
+    def test_max_depth_one_forces_singletons(self):
+        g = axpby_graph()
+        plan = partition(g, max_depth=1)
+        assert plan.n_parts == len(g.nodes)
+
+    def test_scalar_budget_splits_scale_chain(self):
+        # three chained scales carry 3 scalars > the P' budget of 2
+        g = chain_graph(["c0_scale", "c0_scale", "c0_scale"])
+        plan = partition(g)
+        assert plan.n_parts >= 2
+        assert all(len(p.node_ids) <= 2 for p in plan.parts)
+        assert_plan_matches_oracle(plan, _rand(256), 2.0, -1.0, 0.5)
+
+    def test_diamond_reuse_keeps_fanout_value_materialised(self):
+        g = ops.c0_pipeline_graph("diamond")
+        plan = partition(g, model=TPU_V5E)
+        # scale's output has two consumers → it can never be elided
+        assert (0,) in plan.chains()
+        assert_plan_matches_oracle(plan, _rand(777), 3.0)
+
+    def test_fanout_to_graph_output_blocks_fusion(self):
+        g = Graph("t")
+        x, s = g.input("x"), g.scalar("s")
+        u = g.apply("c0_scale", x, s)
+        g.output(u)                         # intermediate is also an output
+        g.output(g.apply("c0_copy", u))
+        plan = partition(g)
+        assert plan.n_parts == 2
+        assert_plan_matches_oracle(plan, _rand(128), 2.0)
+
+
+class TestSearchQuality:
+    @pytest.mark.parametrize("method", ["greedy", "beam"])
+    def test_never_worse_than_unfused(self, method):
+        for kind in ops.C0_PIPELINES:
+            g = ops.c0_pipeline_graph(kind)
+            plan = partition(g, model=TPU_V5E, method=method)
+            unf = partition(g, model=TPU_V5E, method="singletons")
+            assert plan.predicted_time() <= unf.predicted_time() * (1 + 1e-9)
+            assert (plan.modeled_hbm_bytes()
+                    <= unf.modeled_hbm_bytes())
+
+    def test_beam_at_least_as_good_as_every_hand_split(self):
+        g = axpby_graph()
+        plan = partition(g, model=TPU_V5E)
+        for split in ([[0], [1], [2], [3]], [[0, 1], [2], [3]],
+                      [[0], [1, 2], [3]], [[0, 1, 2], [3]]):
+            hand = plan_from_chains(g, split, model=TPU_V5E)
+            assert plan.predicted_time() <= hand.predicted_time() * (1 + 1e-9)
+
+    def test_searched_chains_bytes_reduction(self):
+        g = axpby_graph()
+        plan = partition(g)
+        n = 1 << 16
+        ratio = g.hbm_bytes_unfused(n, F32) / plan.modeled_hbm_bytes(n, F32)
+        assert ratio >= 1.5
+
+    def test_saxpby_join_absorbed_once(self):
+        g = ops.c0_pipeline_graph("saxpby")
+        plan = partition(g, model=TPU_V5E)
+        # only the first-slot producer can absorb the join: (0, 2)
+        assert sorted(plan.chains()) == [(0, 2), (1,)]
+        assert_plan_matches_oracle(plan, _rand(640), _rand(640, 1), 2.0, 3.0)
+
+    def test_unknown_method_raises(self):
+        with pytest.raises(ValueError, match="unknown method"):
+            partition(axpby_graph(), method="dp")
+
+
+class TestPlanFromChains:
+    def test_must_cover_graph_exactly(self):
+        g = axpby_graph()
+        with pytest.raises(ValueError, match="cover"):
+            plan_from_chains(g, [[0, 1, 2]])            # node 3 missing
+        with pytest.raises(ValueError, match="cover"):
+            plan_from_chains(g, [[0, 1, 2], [3], [3]])  # duplicated
+
+    def test_illegal_chain_raises(self):
+        g = ops.c0_pipeline_graph("diamond")
+        with pytest.raises(ValueError, match="not a legal"):
+            plan_from_chains(g, [[0, 1], [2]])          # fan-out on node 0
+
+    def test_hand_split_executes(self):
+        g = axpby_graph()
+        plan = plan_from_chains(g, [[0, 1], [2], [3]])
+        assert plan.n_parts == 3
+        assert_plan_matches_oracle(plan, _rand(256), _rand(256, 1), 2.0, 0.5)
+
+
+class TestPlanExecution:
+    def test_operand_arity_checked(self):
+        plan = partition(axpby_graph())
+        with pytest.raises(TypeError, match="expects 4 operands"):
+            plan(_rand(64), _rand(64, 1), 2.0)
+
+    def test_kernel_mode_on_cpu_via_auto_is_ref(self):
+        plan = partition(axpby_graph())
+        x, b = _rand(100), _rand(100, 1)
+        got = plan(x, b, 2.0, 0.5, mode="auto")
+        want = plan.ref(x, b, 2.0, 0.5)
+        for g_, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g_), np.asarray(w),
+                                       rtol=1e-6)
+
+    def test_registry_mode_context_applies(self):
+        plan = partition(axpby_graph())
+        x, b = _rand(100), _rand(100, 1)
+        with isa.use("interpret"):
+            got = plan(x, b, 2.0, 0.5)
+        want = plan.ref(x, b, 2.0, 0.5)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_multi_output_order_matches_declaration(self):
+        g = axpby_graph()
+        plan = partition(g)
+        x, b = _rand(128), _rand(128, 1)
+        out, res = plan(x, b, 2.0, 0.5, mode="interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(2.0 * x + b),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(res), np.asarray(x + 0.5 * b),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_non_template_singleton_dispatches(self):
+        # c3_prefixsum has no template: it must ride as a dispatch part
+        g = Graph("mixed")
+        x = g.input("x")
+        y = g.apply("c0_scale", x, 2.0)
+        g.output(g.apply("c3_prefixsum", y))
+        plan = partition(g)
+        assert any(p.program is None for p in plan.parts)
+        x = _rand(256)
+        # looser tolerance: Hillis–Steele and cumsum round differently
+        np.testing.assert_allclose(
+            np.asarray(plan(x, mode="interpret")),
+            np.asarray(plan.ref(x)), rtol=1e-4, atol=1e-5)
+
+    def test_value_reuse_same_operand_twice(self):
+        g = Graph("reuse")
+        x = g.input("x")
+        g.output(g.apply("c0_add", x, x))
+        plan = partition(g)
+        xv = _rand(96)
+        got = plan(xv, mode="interpret")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(xv + xv),
+                                   rtol=1e-6)
+
+
+class TestBufferReuse:
+    def test_linear_chain_of_parts_reuses_slots(self):
+        # scale×3 splits into ≥2 parts; the first part's output dies
+        # after the second consumes it → its slot is recycled.
+        g = chain_graph(["c0_scale", "c0_scale", "c0_scale"])
+        plan = partition(g)
+        assert plan.n_slots < plan.n_values
+
+    def test_all_live_values_get_distinct_slots(self):
+        plan = partition(axpby_graph(), method="singletons")
+        # inputs x,b live until the last part: slots can't alias mid-plan
+        slots = set(plan.slot_of.values())
+        assert plan.n_slots == max(slots) + 1
+
+    def test_plan_report_shape(self):
+        from repro.roofline.analysis import plan_report
+        plan = partition(axpby_graph(), model=TPU_V5E)
+        rep = plan_report(plan, 1 << 18, F32)
+        assert rep["n_parts"] == plan.n_parts
+        assert rep["bytes_reduction"] >= 1.5
+        assert rep["predicted_speedup"] >= 1.0
+        assert rep["n_buffer_slots"] <= rep["n_buffer_values"]
+
+
+class TestFuseIsTrivialCase:
+    def test_fuse_chain_matches_registry_fuse(self):
+        instrs = [isa.get("c0_scale"), isa.get("c0_add")]
+        prog, spec = fuse_chain(instrs)
+        fused = isa.fuse("c0_scale", "c0_add")
+        assert spec == fused.spec
+        assert prog.n_inputs == fused.program.n_inputs
+
+    def test_fuse_chain_raises_where_fuse_did(self):
+        with pytest.raises(ValueError, match="not fusable"):
+            fuse_chain([isa.get("c2_sort")])
+        with pytest.raises(ValueError, match="vector sources"):
+            fuse_chain([isa.get("c0_add")] * 4)
+
+    def test_linear_graph_partition_equals_fuse_bytes(self):
+        g = chain_graph(["c0_scale", "c0_add"])
+        plan = partition(g)
+        fused = isa.fuse("c0_scale", "c0_add")
+        n = 1 << 16
+        assert plan.n_parts == 1
+        assert (plan.modeled_hbm_bytes(n, F32)
+                == fused.program.hbm_bytes_fused(n, F32))
+
+
+GRAPH_CASES = [
+    ("axpby_residual", lambda: (_rand(4096), _rand(4096, 1), 2.0, 0.5)),
+    ("saxpby", lambda: (_rand(2048), _rand(2048, 1), 1.5, -0.5)),
+    ("diamond", lambda: (_rand(1000), 3.0)),
+]
+
+
+class TestOracleEquivalence:
+    """Acceptance: every emitted Plan matches its ref-mode oracle."""
+
+    @pytest.mark.parametrize("method", ["singletons", "greedy", "beam"])
+    @pytest.mark.parametrize("kind,args", GRAPH_CASES,
+                             ids=[k for k, _ in GRAPH_CASES])
+    def test_plan_matches_ref_oracle(self, kind, args, method):
+        g = ops.c0_pipeline_graph(kind)
+        plan = partition(g, model=TPU_V5E, method=method)
+        assert_plan_matches_oracle(plan, *args())

@@ -116,6 +116,68 @@ class TestEngine:
         assert p.time_s == pytest.approx(p.level("l1").busy_s)
 
 
+class TestAssociativity:
+    """CacheLevel.n_ways — set-indexed LRU (ROADMAP open item)."""
+
+    CONFLICT = [0, 256, 0, 256]     # same set in a 4-set direct-mapped L1
+
+    def _hier(self, n_ways):
+        lv = CacheLevel("l1", block_bytes=64, capacity_bytes=256,
+                        bandwidth=1e12, n_ways=n_ways)
+        return Hierarchy("assoc", (lv,), DRAM)
+
+    def test_fully_associative_default_hits_on_reuse(self):
+        p = run(self._hier(None),
+                [Access(a, 64, "r", "s") for a in self.CONFLICT])
+        assert p.level("l1").hits == 2
+
+    def test_direct_mapped_conflict_misses(self):
+        # both lines map to set 0 of 4 → each access evicts the other
+        p = run(self._hier(1),
+                [Access(a, 64, "r", "s") for a in self.CONFLICT])
+        assert p.level("l1").hits == 0
+        assert p.level("l1").misses == 4
+
+    def test_two_way_resolves_the_conflict(self):
+        p = run(self._hier(2),
+                [Access(a, 64, "r", "s") for a in self.CONFLICT])
+        assert p.level("l1").hits == 2
+
+    def test_ways_equal_blocks_matches_fully_associative(self):
+        trace = [Access(64 * i % 512, 64, "r", "s") for i in range(32)]
+        pa = run(self._hier(None), list(trace))
+        pb = run(self._hier(4), list(trace))
+        assert pa.level("l1").hits == pb.level("l1").hits
+        assert pa.dram.bytes == pb.dram.bytes
+
+    def test_set_lru_is_per_set(self):
+        # 2 ways × 2 sets: set 0 sees A(0) B(128) A(0) → LRU keeps both
+        p = run(self._hier(2), [Access(0, 64, "r", "s"),
+                                Access(128, 64, "r", "s"),
+                                Access(0, 64, "r", "s")])
+        assert p.level("l1").hits == 1
+
+    def test_dirty_conflict_eviction_writes_back(self):
+        p = run(self._hier(1), [Access(0, 64, "w", "s"),
+                                Access(256, 64, "r", "s")])
+        assert p.level("l1").writeback_bytes == 64
+
+    def test_invalid_n_ways_rejected(self):
+        with pytest.raises(ValueError, match="n_ways"):
+            CacheLevel("x", block_bytes=64, capacity_bytes=256,
+                       bandwidth=1e9, n_ways=0)
+
+    def test_streaming_prediction_unchanged_by_associativity(self):
+        # cold-miss streams have no reuse to conflict on: the Fig. 3
+        # gates hold for any associativity
+        h = PAPER_ULTRA96
+        lv = dataclasses.replace(h.llc, n_ways=2)
+        h2 = dataclasses.replace(h, levels=h.levels[:-1] + (lv,))
+        a = stream_bandwidth(h, 1 << 20)
+        b = stream_bandwidth(h2, 1 << 20)
+        assert a.effective_bw == pytest.approx(b.effective_bw, rel=1e-6)
+
+
 class TestValidation:
     def test_capacity_must_hold_a_block(self):
         with pytest.raises(ValueError, match="holds no"):
