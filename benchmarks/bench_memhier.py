@@ -88,6 +88,10 @@ def main() -> None:
         row(f"memhier_negotiate_{tag}", 0.0,
             f"law:{bc_old}cols_{t_old*1e6:.1f}us_"
             f"hier:{bc_new}cols_{pred.time_s*1e6:.1f}us")
+        # numeric modeled time so the CI regression gate covers this
+        # suite (benchmarks/regression.py matches "predicted" rows).
+        row(f"memhier_predicted_{tag}_us", pred.time_s * 1e6,
+            f"hier_pick_{bc_new}cols")
         assert pred.time_s <= t_old * (1 + 1e-9), (
             f"{tag}: hierarchy pick {bc_new} modeled slower than law pick "
             f"{bc_old}")

@@ -1,0 +1,127 @@
+"""Benchmark-regression gate: fresh BENCH_*.json vs the previous run's.
+
+    PYTHONPATH=src python -m benchmarks.regression \
+        --old prev_artifacts/ --new BENCH_graph.json [--threshold 0.25]
+
+Compares the machine-readable rows ``benchmarks.run --json`` emits
+against the previous run's artifact (a file, or a directory of
+``BENCH_*.json`` to merge) and exits non-zero when any matching row's
+``us_per_call`` regressed by more than ``--threshold`` (default 25%).
+
+Only *modeled*-time rows are gated — names matching one of the
+``--pattern`` substrings (default: ``predicted``, ``modeled``,
+``overlap``, ``best_hand``) AND carrying a positive ``us_per_call`` —
+because those are deterministic model outputs: a regression means the
+cost model or the search genuinely got worse, not that the CI runner was
+busy. Wall-clock rows are reported for context but never fail the gate.
+Suites are expected to emit at least one numeric modeled row each (e.g.
+``memhier_predicted_*_us``, ``graph_axpby_predicted_us``,
+``hotpath_fast_predicted_us``, ``hotpath_plan_overlap_us``) so the gate
+has teeth beyond a single suite.
+
+Missing previous artifacts (first run, expired retention) skip the
+comparison with a notice and exit 0 — the gate only ever compares runs
+that actually have a baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+DEFAULT_PATTERNS = ("predicted", "modeled", "overlap", "best_hand")
+
+
+def load_rows(path: str, required: bool = False) -> dict[str, dict]:
+    """Rows by name from one BENCH_*.json, or merged from a directory.
+
+    ``required=True`` (the fresh ``--new`` files) fails loudly on a
+    missing path — that's a wiring bug (a suite stopped writing its
+    JSON, or ci.yml drifted), not an acceptable empty baseline.
+    """
+    paths = []
+    if os.path.isdir(path):
+        paths = sorted(glob.glob(os.path.join(path, "**", "BENCH_*.json"),
+                                 recursive=True))
+    elif os.path.exists(path):
+        paths = [path]
+    elif required:
+        raise SystemExit(f"regression: {path!r} does not exist — "
+                         f"did a benchmark step stop writing its JSON?")
+    rows: dict[str, dict] = {}
+    for p in paths:
+        try:
+            with open(p) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"regression: skipping unreadable {p}: {e}",
+                  file=sys.stderr)
+            continue
+        for r in data.get("results", []):
+            rows[r["name"]] = r
+    return rows
+
+
+def compare(old: dict[str, dict], new: dict[str, dict],
+            threshold: float, patterns) -> list[str]:
+    """Returns the list of failed-gate descriptions (empty = pass)."""
+    failures = []
+    for name in sorted(set(old) & set(new)):
+        o, n = old[name]["us_per_call"], new[name]["us_per_call"]
+        if o <= 0 or n <= 0:
+            continue
+        ratio = n / o
+        gated = any(pat in name for pat in patterns)
+        verdict = "OK"
+        if ratio > 1.0 + threshold:
+            verdict = "REGRESSED" if gated else "noisy (not gated)"
+            if gated:
+                failures.append(
+                    f"{name}: {o:.2f} -> {n:.2f} us_per_call "
+                    f"({ratio:.2f}x > {1 + threshold:.2f}x)")
+        print(f"{name},{o:.2f},{n:.2f},{ratio:.2f}x,"
+              f"{'gated' if gated else 'info'},{verdict}")
+    return failures
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--old", required=True,
+                   help="previous BENCH_*.json, or a directory of them")
+    p.add_argument("--new", required=True, action="append",
+                   help="fresh BENCH_*.json (repeatable)")
+    p.add_argument("--threshold", type=float, default=0.25,
+                   help="allowed fractional increase (default 0.25 = 25%%)")
+    p.add_argument("--pattern", action="append", default=None,
+                   help="row-name substring to gate on (repeatable; "
+                        f"default {list(DEFAULT_PATTERNS)})")
+    args = p.parse_args(argv)
+
+    old = load_rows(args.old)
+    if not old:
+        print(f"regression: no previous rows under {args.old!r}; "
+              f"nothing to compare (first run?) — passing")
+        return
+    new: dict[str, dict] = {}
+    for path in args.new:
+        new.update(load_rows(path, required=True))
+    if not new:
+        raise SystemExit("regression: fresh files exist but contain no "
+                         "rows — benchmark output is broken")
+
+    patterns = tuple(args.pattern) if args.pattern else DEFAULT_PATTERNS
+    print("name,old_us,new_us,ratio,class,verdict")
+    failures = compare(old, new, args.threshold, patterns)
+    matched = len(set(old) & set(new))
+    print(f"regression: {matched} matching rows, "
+          f"{len(failures)} over the {args.threshold:.0%} threshold")
+    if failures:
+        for f in failures:
+            print(f"FAIL {f}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -80,7 +80,7 @@ def memhier_main(argv):
 
     from repro.core import isa
     import repro.kernels  # noqa: F401 — registers the ISA
-    from repro.memhier import PRESETS, simulate, trace_program
+    from repro.memhier import PRESETS, simulate_fast, trace_program
 
     preset, chains = "paper_ultra96", list(argv)
     if chains and chains[0] in PRESETS:
@@ -98,9 +98,12 @@ def memhier_main(argv):
     n_elems, dtype = 1 << 18, jnp.float32
 
     def predicted_us(h, prog):
-        # raw simulate (not predict_program): the candidate's own LLC
-        # block must drive the burst size being tuned.
-        return simulate(h, trace_program(prog, n_elems, dtype)).time_s * 1e6
+        # raw engine (not predict_program): the candidate's own LLC
+        # block must drive the burst size being tuned. simulate_fast is
+        # bit-identical to the reference on these streaming traces and
+        # turns the per-candidate score from seconds into milliseconds.
+        return simulate_fast(
+            h, trace_program(prog, n_elems, dtype)).time_s * 1e6
 
     os.makedirs("experiments/perf", exist_ok=True)
     path = f"experiments/perf/memhier_{preset}.md"

@@ -33,6 +33,17 @@ class BurstModel:
         """Block size achieving 50% of peak."""
         return self.peak_bw * self.overhead_s
 
+    def fingerprint(self) -> tuple:
+        """Hashable value identifying this model's predictions.
+
+        The dispatch-cache key component in
+        :meth:`repro.core.program.Program.negotiate_geometry`: two models
+        with equal fingerprints score geometries identically, and any
+        parameter edit (a ``dataclasses.replace``) changes the
+        fingerprint, so cached geometries invalidate correctly.
+        """
+        return ("burst", self.peak_bw, self.overhead_s)
+
     def effective_bw(self, block_bytes: float) -> float:
         return self.peak_bw * block_bytes / (block_bytes + self.n_half_bytes)
 

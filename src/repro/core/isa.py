@@ -238,12 +238,19 @@ class Registry:
     def __init__(self):
         self._instrs: dict[str, Instruction] = {}
         self._tls = threading.local()
+        # fuse() results by (names, display name): a fused chain is
+        # immutable once built, so repeated fuse() calls reuse the same
+        # FusedProgram — and with it the Program's warm dispatch caches
+        # (negotiated geometry, jitted pallas_call; DESIGN.md §12).
+        self._fuse_cache: dict[tuple, "FusedProgram"] = {}
 
     # -- registration --------------------------------------------------------
     def register(self, instr: Instruction, *, overwrite: bool = False) -> Instruction:
         if instr.name in self._instrs and not overwrite:
             raise ValueError(f"instruction {instr.name!r} already registered")
         self._instrs[instr.name] = instr
+        # a (re)registered instruction may change any chain containing it
+        self._fuse_cache.clear()
         return instr
 
     def define(self, name: str, *, itype: str = "I'", scalar_in: int = 0,
@@ -284,13 +291,27 @@ class Registry:
         :func:`fuse_chain` primitive the DAG search evaluates every
         candidate chain with — here validation errors propagate; there
         they mean "split the chain".
+
+        Repeated fuse() of the same chain returns the SAME FusedProgram
+        (invalidated when any instruction is re-registered), so hot
+        dispatch paths share the Program's warm caches. Treat the result
+        as immutable: editing its ``program`` (model, budget, buffers)
+        would be visible to every other caller of the chain — to rescore
+        under a different model, shallow-copy the program first, as
+        :func:`repro.memhier.predict.best_geometry` does.
         """
         if not names:
             raise ValueError("fuse() needs at least one instruction name")
+        key = (tuple(names), name)
+        cached = self._fuse_cache.get(key)
+        if cached is not None:
+            return cached
         instrs = tuple(self.get(n) for n in names)
         prog, spec = fuse_chain(instrs, name=name or "+".join(names))
-        return FusedProgram(name=prog.name, spec=spec, instrs=instrs,
-                            program=prog, registry=self)
+        fused = FusedProgram(name=prog.name, spec=spec, instrs=instrs,
+                             program=prog, registry=self)
+        self._fuse_cache[key] = fused
+        return fused
 
     # -- lookup ---------------------------------------------------------------
     def get(self, name: str) -> Instruction:

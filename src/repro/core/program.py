@@ -32,15 +32,29 @@ A Program is one *chain*; whole instruction DAGs are partitioned into
 chains by the :mod:`repro.graph` dataflow compiler (DESIGN.md §11),
 whose candidate chains are compiled through the same
 :func:`repro.core.isa.fuse_chain` primitive as ``fuse()``.
+
+Hot-path caching (DESIGN.md §12): geometry negotiation is memoised per
+``(program identity, n_elems, dtype, model fingerprint)`` in a shared
+module-level cache (so the partitioner's many equivalent candidate
+Programs share negotiated geometries), ``__call__`` resolves a warm
+dispatch through a per-instance ``(n_elems bucket, dtype, model
+fingerprint)`` table without re-entering negotiation at all, and the
+built ``pallas_call`` is wrapped in ``jax.jit`` and cached per operand
+signature so a warm call never re-traces. :data:`DISPATCH_STATS` counts
+hits/misses/traces; ``benchmarks/bench_hotpath.py`` gates zero
+renegotiation and zero re-trace on the warm path.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
+import weakref
 from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -56,6 +70,123 @@ from .template import Stage, emit_stage
 _BLOCK_COL_CANDIDATES = tuple(LANES * (1 << k) for k in range(7))
 
 
+# ---------------------------------------------------------------------------
+# dispatch caching (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Counters behind the warm-dispatch gates in bench_hotpath."""
+
+    geometry_hits: int = 0       # negotiations answered from the cache
+    geometry_misses: int = 0     # negotiations that ran the candidate loop
+    call_builds: int = 0         # pallas_call callables constructed
+    kernel_traces: int = 0       # times a fused kernel body was traced
+
+
+DISPATCH_STATS = DispatchStats()
+
+# (program identity, n_elems, dtype, model fp, budget, n_buffers)
+#   -> (block_rows, block_cols, StreamConfig) | ("no-fit", message)
+# Bounded FIFO: negotiations are cheap enough to redo that a dropped old
+# entry only costs one candidate sweep, while the bound keeps long-lived
+# processes (serving, size sweeps) from growing the cache monotonically.
+_GEOMETRY_CACHE: dict = {}
+_GEOMETRY_CACHE_MAX = 4096
+# Per-Program executable-cache bound: each entry pins a jitted
+# pallas_call, so a long-lived Program sweeping many operand shapes must
+# not accumulate one forever (same monotonic-growth concern as above).
+_EXE_CACHE_MAX = 64
+# Per-Program warm-dispatch table bound (entries are tiny, but a served
+# Program whose model is re-bound repeatedly would otherwise grow it).
+_DISPATCH_CACHE_MAX = 256
+
+
+def reset_dispatch_stats() -> None:
+    global DISPATCH_STATS
+    DISPATCH_STATS = DispatchStats()
+
+
+def clear_dispatch_caches() -> None:
+    """Drop every warm dispatch cache: the shared geometry cache, the
+    registry's memoised FusedPrograms, and the per-instance tables of the
+    Programs those kept alive (other Program instances' tables die with
+    the instances)."""
+    _GEOMETRY_CACHE.clear()
+    from . import isa as _isa          # deferred: isa imports us lazily
+    for fused in _isa.registry._fuse_cache.values():
+        fused.program._dispatch_cache.clear()
+        fused.program._exe_cache.clear()
+    _isa.registry._fuse_cache.clear()
+
+
+def _dtype_name(dtype) -> str:
+    return np.dtype(dtype).name
+
+
+def _n_bucket(n: int) -> int:
+    """Warm-dispatch size bucket: next power of two. Calls within one
+    bucket reuse the first negotiated geometry (any legal geometry is
+    numerically identical; only the modeled time moves within a 2×
+    band), so a sweep over nearby sizes stays on the warm path."""
+    n = int(n)
+    return 1 << max(0, n - 1).bit_length()
+
+
+# Identity tokens for models without a fingerprint(): weak-keyed so a
+# token lives exactly as long as its model — a dead model's token is
+# never reissued (a raw id() could be recycled by the allocator and
+# alias a different model's cached geometry). Unweakrefable models are
+# pinned in _MODEL_PIN instead: a deliberate (tiny, rare) leak that
+# buys the same no-aliasing guarantee.
+_MODEL_TOKENS = weakref.WeakKeyDictionary()
+_MODEL_PIN: dict = {}
+_MODEL_COUNTER = itertools.count().__next__
+
+
+def _model_fingerprint(model) -> tuple:
+    """Hashable identity of the memory model's predictions.
+
+    BurstModel and Hierarchy provide value-based fingerprints (model
+    edits — a ``dataclasses.replace``d LLC block, a policy change — make
+    new frozen objects, hence new fingerprints, invalidating cached
+    geometries). Unknown models fall back to a per-object token: correct
+    for distinct objects, no value-level invalidation.
+    """
+    fp = getattr(model, "fingerprint", None)
+    if fp is not None:
+        return fp()
+    try:
+        tok = _MODEL_TOKENS.get(model)
+        if tok is None:
+            tok = _MODEL_COUNTER()
+            _MODEL_TOKENS[model] = tok
+    except TypeError:                   # unhashable/unweakrefable model
+        key = id(model)
+        pinned = _MODEL_PIN.get(key)
+        if pinned is None or pinned[0] is not model:
+            pinned = (model, _MODEL_COUNTER())
+            _MODEL_PIN[key] = pinned    # strong ref: id can't recycle
+        tok = pinned[1]
+    return ("token", tok)
+
+
+def _cache_geometry(key, value) -> None:
+    """Insert with a FIFO bound: oldest entries evict first (redoing an
+    evicted negotiation costs one candidate sweep, nothing correctness-
+    relevant)."""
+    if len(_GEOMETRY_CACHE) >= _GEOMETRY_CACHE_MAX:
+        _GEOMETRY_CACHE.pop(next(iter(_GEOMETRY_CACHE)))
+    _GEOMETRY_CACHE[key] = value
+
+
+def _stage_identity(st: Stage) -> tuple:
+    return (st.name, st.n_scalar_in, st.n_vec_in, st.n_vec_out,
+            st.block_rows, st.block_cols, st.carry_cols,
+            _dtype_name(st.carry_dtype), st.carry_init,
+            st.out_shapes is None)
+
+
 class Program:
     """A chain of Stages compiled to one pallas_call.
 
@@ -67,13 +198,19 @@ class Program:
             a one-term :class:`BurstModel` (the legacy law) or a
             :class:`repro.memhier.hierarchy.Hierarchy`, in which case
             candidates are scored by the trace-driven simulator
-            (:func:`repro.memhier.predict.predict_program`).
+            (:func:`repro.memhier.predict.predict_program`, running the
+            phase-structured fast engine).
     vmem_budget: VMEM capacity bound for resident operand blocks.
+    n_buffers: DMA double-buffering depth: enters the VMEM footprint
+            (each resident operand block is held ``n_buffers`` times)
+            AND the hierarchy timing term (≥ 2 overlaps fill with
+            compute; 1 serialises — see :mod:`repro.memhier.predict`).
     """
 
     def __init__(self, stages: Sequence[Stage], name: Optional[str] = None,
                  model=TPU_V5E_HBM,
-                 vmem_budget: int = VMEM_BYTES):
+                 vmem_budget: int = VMEM_BYTES,
+                 n_buffers: int = 2):
         stages = tuple(stages)
         if not stages:
             raise ValueError("a Program needs at least one stage")
@@ -81,6 +218,13 @@ class Program:
         self.name = name or "+".join(st.name for st in stages)
         self.model = model
         self.vmem_budget = vmem_budget
+        self.n_buffers = n_buffers
+        # structural identity: the shared geometry-cache key component —
+        # equivalent Programs (same stages/budget) share negotiations.
+        self._identity = tuple(_stage_identity(st) for st in stages)
+        self._dispatch_cache: dict = {}   # warm __call__ geometry table
+        self._exe_cache: dict = {}        # operand signature -> jitted call
+        self._model_fp: Optional[tuple] = None   # (model, fingerprint) memo
 
         # -- chain validation (raises at fuse() time) ----------------------
         self._n_chained = [0]
@@ -127,6 +271,18 @@ class Program:
     def pipeline_depth(self) -> int:
         """Chained latency: grid steps before the first fused block lands."""
         return sum(st.pipeline_depth() for st in self.stages)
+
+    def _current_model_fp(self) -> tuple:
+        """The model fingerprint, memoised per model *object* so the warm
+        dispatch path pays a single identity check, not a per-call
+        ``fingerprint()`` rebuild. Rebinding ``self.model`` (the only way
+        to change a frozen model) invalidates via the identity check."""
+        memo = self._model_fp
+        if memo is not None and memo[0] is self.model:
+            return memo[1]
+        fp = _model_fingerprint(self.model)
+        self._model_fp = (self.model, fp)
+        return fp
 
     def split_operands(self, operands):
         """User-order flat operands → per-stage (scalars, ext_vectors).
@@ -175,9 +331,27 @@ class Program:
         paper's Fig. 3 trade-off at TPU scale). With a BurstModel the
         score is the one-term burst law; with a memhier Hierarchy each
         candidate is simulated trace-driven (per-level traffic included,
-        intermediates elided). Returns (block_rows, block_cols,
-        StreamConfig).
+        intermediates elided) by the fast engine. Returns (block_rows,
+        block_cols, StreamConfig).
+
+        Results are memoised in a module-level cache keyed on the
+        program's structural identity, (n_elems, dtype), the model
+        fingerprint and the budget/buffer knobs (DESIGN.md §12): a
+        repeated negotiation — same Program warm, or an equivalent
+        candidate chain inside the partitioner's beam search — costs one
+        dict lookup instead of a simulated candidate sweep. Model edits
+        change the fingerprint and miss correctly.
         """
+        key = (self._identity, int(n_elems), _dtype_name(dtype),
+               self._current_model_fp(), self.vmem_budget,
+               self.n_buffers)
+        hit = _GEOMETRY_CACHE.get(key)
+        if hit is not None:
+            DISPATCH_STATS.geometry_hits += 1
+            if hit[0] == "no-fit":
+                raise ValueError(hit[1])
+            return hit
+        DISPATCH_STATS.geometry_misses += 1
         block_rows = 1
         for st in self.stages:
             block_rows = math.lcm(block_rows, st.block_rows)
@@ -200,7 +374,8 @@ class Program:
         for bc in candidates:
             block_elems = block_rows * bc
             cfg = StreamConfig(vlen_bits=LANES * bits,
-                               block_bits=block_elems * bits)
+                               block_bits=block_elems * bits,
+                               n_buffers=self.n_buffers)
             try:
                 cfg.check_vmem_budget(n_resident, budget=self.vmem_budget)
             except ValueError:
@@ -208,7 +383,8 @@ class Program:
             if use_hierarchy:
                 t = predict_program(self.model, self, n_elems, dtype,
                                     block_rows=block_rows,
-                                    block_cols=bc).time_s
+                                    block_cols=bc,
+                                    n_buffers=self.n_buffers).time_s
             else:
                 padded = round_up(max(n_elems, 1), block_elems)
                 t = n_io * self.model.time_for(padded * bits / 8,
@@ -216,11 +392,15 @@ class Program:
             if best is None or t < best[0]:
                 best = (t, bc, cfg)
         if best is None:
-            raise ValueError(
-                f"{self.name}: no block geometry fits {n_resident} resident "
-                f"operands in the {self.vmem_budget}-byte VMEM budget")
+            msg = (f"{self.name}: no block geometry fits {n_resident} "
+                   f"resident operands in the {self.vmem_budget}-byte "
+                   f"VMEM budget")
+            _cache_geometry(key, ("no-fit", msg))
+            raise ValueError(msg)
         _, bc, cfg = best
-        return block_rows, bc, cfg
+        result = (block_rows, bc, cfg)
+        _cache_geometry(key, result)
+        return result
 
     # -- kernel emission ----------------------------------------------------
     def _fused_kernel(self, block_rows: int, block_cols: int):
@@ -230,6 +410,9 @@ class Program:
         n_inter = self.n_intermediates
 
         def kernel(*refs):
+            # trace-time side effect: runs once per (re)trace, never at
+            # execution — the bench_hotpath zero-retrace gate reads it.
+            DISPATCH_STATS.kernel_traces += 1
             scalar_refs = refs[:ns]
             vec_refs = refs[ns:ns + nv]
             out_refs = refs[ns + nv:ns + nv + no]
@@ -304,6 +487,21 @@ class Program:
                 jax.ShapeDtypeStruct(vectors[0].shape, vectors[0].dtype)
                 for _ in range(last.n_vec_out))
 
+        # warm dispatch: one jitted pallas_call per operand signature —
+        # a repeat call with the same shapes re-traces nothing.
+        scalars = tuple(jnp.asarray(s).reshape(-1) for s in scalars)
+        sig = (block_rows, block_cols, bool(interpret),
+               tuple((tuple(s.shape), _dtype_name(s.dtype))
+                     for s in scalars),
+               tuple((tuple(v.shape), _dtype_name(v.dtype))
+                     for v in vectors),
+               tuple((tuple(o.shape), _dtype_name(o.dtype))
+                     for o in out_shape))
+        cached = self._exe_cache.get(sig)
+        if cached is not None:
+            return cached(*scalars, *vectors)
+        DISPATCH_STATS.call_builds += 1
+
         blockspec = pl.BlockSpec((block_rows, block_cols),
                                  lambda r, c: (r, c))
         in_specs = ([pl.BlockSpec(memory_space=pltpu.SMEM)] * len(scalars)
@@ -333,7 +531,7 @@ class Program:
             compiler_params = cp_cls(
                 dimension_semantics=("parallel", "arbitrary"))
 
-        fn = pl.pallas_call(
+        fn = jax.jit(pl.pallas_call(
             self._fused_kernel(block_rows, block_cols),
             grid=grid,
             in_specs=in_specs,
@@ -342,8 +540,10 @@ class Program:
             scratch_shapes=scratch,
             interpret=interpret,
             compiler_params=compiler_params,
-        )
-        scalars = tuple(jnp.asarray(s).reshape(-1) for s in scalars)
+        ))
+        if len(self._exe_cache) >= _EXE_CACHE_MAX:
+            self._exe_cache.pop(next(iter(self._exe_cache)))
+        self._exe_cache[sig] = fn
         return fn(*scalars, *vectors)
 
     def _check_vectors(self, per_stage):
@@ -377,13 +577,29 @@ class Program:
     def __call__(self, *operands, interpret: bool = False):
         """The shared streaming entry path: normalise arbitrary-shaped
         vector operands to padded 2D blocks, negotiate the fused geometry,
-        launch the single pallas_call, restore the caller's shapes."""
+        launch the single pallas_call, restore the caller's shapes.
+
+        Warm calls hit the per-instance dispatch table — keyed on the
+        power-of-two ``n_elems`` bucket, dtype and model fingerprint —
+        and skip negotiation entirely; the jitted ``pallas_call`` is
+        reused per operand signature, so a repeat call does zero Python
+        negotiation and zero kernel re-tracing (DESIGN.md §12).
+        """
         per_stage = self.split_operands(operands)
         flat_vecs = self._check_vectors(per_stage)
         ref_v = flat_vecs[0]
         n = ref_v.size
 
-        block_rows, block_cols, _ = self.negotiate_geometry(n, ref_v.dtype)
+        dkey = (_n_bucket(n), _dtype_name(ref_v.dtype),
+                self._current_model_fp(), self.vmem_budget,
+                self.n_buffers)
+        geom = self._dispatch_cache.get(dkey)
+        if geom is None:
+            geom = self.negotiate_geometry(n, ref_v.dtype)[:2]
+            if len(self._dispatch_cache) >= _DISPATCH_CACHE_MAX:
+                self._dispatch_cache.pop(next(iter(self._dispatch_cache)))
+            self._dispatch_cache[dkey] = geom
+        block_rows, block_cols = geom
         norm = []
         for sc, ext in per_stage:
             norm.extend(sc)

@@ -30,6 +30,16 @@ extend-vs-cut decisions, scores partitions with the
 the analytic ``hbm_bytes_fused`` byte count otherwise), and returns the
 cheapest of {beam, greedy, all-singleton} — so the result is never worse
 than the all-unfused plan under the chosen cost model.
+
+Hot path (DESIGN.md §12): every simulated score routes through the
+phase-structured fast engine (:mod:`repro.memhier.fastsim`) via
+:func:`~repro.memhier.predict.predict_program`, and every candidate
+chain's ``negotiate_geometry`` hits the shared module-level geometry
+cache in :mod:`repro.core.program` — so beam search re-pays neither the
+per-access Python cache walk nor repeated candidate sweeps. The search
+objective stays the *summed* part cost (a serial upper bound, monotone
+under chain splits); the emitted :class:`Plan` additionally reports the
+overlap-aware critical-path ``predicted_time``.
 """
 from __future__ import annotations
 

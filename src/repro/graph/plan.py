@@ -3,12 +3,13 @@
 A :class:`Plan` is what :func:`repro.graph.partition.partition` returns:
 the graph's nodes covered by :class:`Part`\\ s (each a fused
 :class:`~repro.core.program.Program` or a direct-dispatch singleton),
-topologically ordered, with a linear-scan buffer-slot assignment for the
+topologically ordered, with a level-scan buffer-slot assignment for the
 materialised inter-program values (graph inputs and part outputs): a
-value's slot is recycled once its last consuming part has run, so the
-peak number of live inter-program buffers — ``n_slots`` — is what an
-allocator must provision, not one buffer per value. Execution mirrors
-the assignment by dropping dead values from the environment, letting the
+value's slot is recycled once the dependency level holding its last
+consuming part has completed, so the peak number of live inter-program
+buffers — ``n_slots`` — is what an allocator must provision for the
+overlapped schedule, not one buffer per value. Execution mirrors the
+assignment by dropping dead values from the environment, letting the
 runtime reuse their storage.
 
 Dispatch honours the registry modes (DESIGN.md §1): ``ref`` runs the
@@ -16,6 +17,16 @@ graph node-by-node through the registered oracles — the end-to-end
 correctness oracle every emitted Plan is validated against; ``kernel`` /
 ``interpret`` run the parts' single-``pallas_call`` programs (simulated
 on CPU for interpret); ``auto`` picks kernel iff on TPU.
+
+Independent parts overlap (DESIGN.md §12): the parts form their own
+DAG (an edge wherever one part consumes another's materialised output),
+:meth:`Plan.schedule` levels it, ``__call__`` dispatches a whole level
+before binding any of its outputs (data-dependency order only — no
+false serialisation from the linear part order), and
+:meth:`Plan.predicted_time` is the critical-path makespan over that DAG
+— the software form of the paper's multiple reconfigurable regions
+running concurrently — rather than the serial sum (still available via
+``overlap=False``).
 """
 from __future__ import annotations
 
@@ -110,10 +121,32 @@ class Plan:
         dt = dtype if dtype is not None else self.dtype
         return sum(p.hbm_bytes(n, dt) for p in self.parts)
 
+    def part_deps(self) -> tuple[frozenset, ...]:
+        """Per part, the indices of parts whose outputs it consumes.
+
+        Graph inputs contribute no edge; scalars never do. Parts are
+        topologically ordered at construction, so ``deps[i] ⊆ {0..i-1}``.
+        """
+        return _part_deps(self.graph, self.parts)
+
+    def schedule(self) -> tuple[tuple[int, ...], ...]:
+        """Dependency levels of the part DAG: every part in a level
+        depends only on strictly earlier levels, so a level's parts are
+        mutually independent and dispatch together in ``__call__``."""
+        return _part_levels(self.graph, self.parts)
+
     def predicted_time(self, hierarchy=None, n_elems: Optional[int] = None,
-                       dtype=None) -> float:
-        """memhier-predicted seconds, summed over parts (parts run as
-        separate pallas_calls, so they serialise)."""
+                       dtype=None, overlap: bool = True) -> float:
+        """memhier-predicted seconds of the whole plan.
+
+        With ``overlap=True`` (default) this is the critical-path
+        makespan over the part DAG: independent parts — separate
+        reconfigurable regions with no data edge — run concurrently, so
+        only the longest dependency chain counts (never less than the
+        slowest chain, strictly less than the serial sum whenever any
+        two parts are independent). ``overlap=False`` restores the
+        serial sum — parts strictly one after another.
+        """
         from .partition import part_cost
         hier = hierarchy if hierarchy is not None else self.hierarchy
         if hier is None:
@@ -121,7 +154,15 @@ class Plan:
                              "used to build this plan)")
         n = n_elems if n_elems is not None else self.n_elems
         dt = dtype if dtype is not None else self.dtype
-        return sum(part_cost(p, n, dt, hier) for p in self.parts)
+        costs = [part_cost(p, n, dt, hier) for p in self.parts]
+        if not overlap:
+            return sum(costs)
+        deps = self.part_deps()
+        finish: list[float] = []
+        for i, c in enumerate(costs):
+            start = max((finish[j] for j in deps[i]), default=0.0)
+            finish.append(start + c)
+        return max(finish, default=0.0)
 
     def describe(self) -> str:
         lines = [f"Plan({self.graph.name}, method={self.method}): "
@@ -182,26 +223,38 @@ class Plan:
             return self.ref(*operands)
         env, scal = self._bind(operands)
         vals = dict(env)
-        dies = _death_schedule(self.graph, self.parts)
-        for idx, part in enumerate(self.parts):
-            if part.program is not None:
-                ops: list[Any] = []
-                for i, node in enumerate(part.nodes):
-                    k = part.nodes[i - 1].n_vec_out if i else 0
-                    ops.extend(scal[s] for s in node.scalar_in)
-                    ops.extend(vals[v] for v in node.vec_in[k:])
-                out = part.program(*ops, interpret=(mode == "interpret"))
-            else:
-                node = part.nodes[0]
-                ops = [vals[o] if isinstance(o, Value) else scal[o]
-                       for o in node.operands]
-                out = reg.dispatch(node.name, *ops, mode=mode)
-            outs = out if isinstance(out, tuple) else (out,)
-            for i, r in enumerate(outs):
-                vals[Value(self.graph.gid, part.last.nid, i)] = r
-            # buffer reuse: drop values whose last consumer has run so
-            # their storage is reclaimable (mirrors the slot assignment).
-            for v in dies.get(idx, ()):
+        levels = self.schedule()
+        dies = _death_schedule(self.graph, self.parts, levels)
+        # dispatch level by level: a level's parts have no data edges
+        # between them, so they issue back to back with no value of one
+        # feeding another — the async runtime (and real multi-region
+        # hardware) is free to overlap them. Outputs bind only after the
+        # whole level has been issued, making the independence structural.
+        for li, level in enumerate(levels):
+            issued: list[tuple[Part, Any]] = []
+            for idx in level:
+                part = self.parts[idx]
+                if part.program is not None:
+                    ops: list[Any] = []
+                    for i, node in enumerate(part.nodes):
+                        k = part.nodes[i - 1].n_vec_out if i else 0
+                        ops.extend(scal[s] for s in node.scalar_in)
+                        ops.extend(vals[v] for v in node.vec_in[k:])
+                    out = part.program(*ops, interpret=(mode == "interpret"))
+                else:
+                    node = part.nodes[0]
+                    ops = [vals[o] if isinstance(o, Value) else scal[o]
+                           for o in node.operands]
+                    out = reg.dispatch(node.name, *ops, mode=mode)
+                issued.append((part, out))
+            for part, out in issued:
+                outs = out if isinstance(out, tuple) else (out,)
+                for i, r in enumerate(outs):
+                    vals[Value(self.graph.gid, part.last.nid, i)] = r
+            # buffer reuse: drop values whose last consuming level has
+            # run so their storage is reclaimable (mirrors the slot
+            # assignment's intent under the overlapped schedule).
+            for v in dies.get(li, ()):
                 vals.pop(v, None)
         return self._outputs(vals)
 
@@ -210,31 +263,67 @@ class Plan:
 # plan construction
 # ---------------------------------------------------------------------------
 
-def _death_schedule(graph: Graph,
-                    parts: Sequence[Part]) -> dict[int, list[Value]]:
-    """Part index → materialised values whose last use is that part
-    (graph outputs never die)."""
-    last_use: dict[Value, int] = {}
+def _part_deps(graph: Graph,
+               parts: Sequence[Part]) -> tuple[frozenset, ...]:
+    """Per part, the indices of parts whose outputs it consumes."""
+    producer: dict[Value, int] = {}
+    for idx, part in enumerate(parts):
+        for i in range(part.last.n_vec_out):
+            producer[Value(graph.gid, part.last.nid, i)] = idx
+    deps = []
+    for part in parts:
+        deps.append(frozenset(
+            producer[v] for v in part.external_vec_values()
+            if v in producer))
+    return tuple(deps)
+
+
+def _part_levels(graph: Graph,
+                 parts: Sequence[Part]) -> tuple[tuple[int, ...], ...]:
+    """Dependency levels of the part DAG (parts are topo-ordered, so
+    each part's dependencies precede it)."""
+    deps = _part_deps(graph, parts)
+    depth: list[int] = []
+    for i in range(len(parts)):
+        depth.append(1 + max((depth[j] for j in deps[i]), default=-1))
+    levels: dict[int, list[int]] = {}
+    for i, d in enumerate(depth):
+        levels.setdefault(d, []).append(i)
+    return tuple(tuple(levels[d]) for d in sorted(levels))
+
+
+def _death_schedule(graph: Graph, parts: Sequence[Part],
+                    levels: Sequence[Sequence[int]]) -> dict[int, list[Value]]:
+    """Level index → materialised values whose last consuming LEVEL it is
+    (graph outputs never die). Keyed by level, not linear part index:
+    under the overlapped schedule a whole level is in flight at once, so
+    a value stays live until the last level consuming it completes."""
+    level_of = {idx: li for li, lv in enumerate(levels) for idx in lv}
+    last_level: dict[Value, int] = {}
     for idx, part in enumerate(parts):
         for v in part.external_vec_values():
-            last_use[v] = max(last_use.get(v, -1), idx)
+            last_level[v] = max(last_level.get(v, -1), level_of[idx])
     alive = set(graph.outputs)
-    return_schedule: dict[int, list[Value]] = {}
-    for v, idx in last_use.items():
+    schedule: dict[int, list[Value]] = {}
+    for v, li in last_level.items():
         if v not in alive:
-            return_schedule.setdefault(idx, []).append(v)
-    return return_schedule
+            schedule.setdefault(li, []).append(v)
+    return schedule
 
 
 def _assign_slots(graph: Graph, parts: Sequence[Part]):
-    """Linear-scan slot allocation over the materialised values.
+    """Level-scan slot allocation over the materialised values.
 
-    Inputs are live from the start; each part's last-node outputs
-    allocate at its index; a slot frees once its value's last consuming
-    part has run (graph outputs never free). Returns (slot_of, n_slots,
-    n_values).
+    Mirrors the overlapped execution schedule: inputs are live from the
+    start; each level's part outputs allocate together; a slot frees
+    only once the level holding its value's last consumer has completed
+    (graph outputs never free) — so ``n_slots`` is what an allocator
+    must provision for the *concurrent* schedule, never fewer. On
+    serial chains (one part per level) this reduces to the linear scan.
+    Returns (slot_of, n_slots, n_values).
     """
-    dies = _death_schedule(graph, parts)
+    levels = _part_levels(graph, parts)
+    dies = _death_schedule(graph, parts, levels)
     slot_of: dict[Value, int] = {}
     free: list[int] = []
     n_slots = 0
@@ -249,10 +338,12 @@ def _assign_slots(graph: Graph, parts: Sequence[Part]):
 
     for v in graph.inputs:
         alloc(v)
-    for idx, part in enumerate(parts):
-        for i in range(part.last.n_vec_out):
-            alloc(Value(graph.gid, part.last.nid, i))
-        for v in dies.get(idx, ()):
+    for li, level in enumerate(levels):
+        for idx in level:
+            part = parts[idx]
+            for i in range(part.last.n_vec_out):
+                alloc(Value(graph.gid, part.last.nid, i))
+        for v in dies.get(li, ()):
             free.append(slot_of[v])
     return slot_of, n_slots, len(slot_of)
 

@@ -62,7 +62,9 @@ def extrapolated_costs(cfg, shape, mesh, grad_accum: int):
 
 def _resolve_hierarchy(hierarchy):
     """None/"flat" → the flat bytes/peak term; a preset name or a
-    repro.memhier Hierarchy → the trace-driven burst-aware term."""
+    repro.memhier Hierarchy → the trace-driven burst-aware term
+    (simulated by the memhier fast engine — see DESIGN.md §12 — so the
+    per-cell cost stays negligible next to lower+compile)."""
     if hierarchy in (None, "flat"):
         return None
     if isinstance(hierarchy, str):

@@ -2,12 +2,16 @@
 
 Replaces the one-term burst law as the repo's memory-system model:
 :mod:`~repro.memhier.hierarchy` describes the levels (DL1 full-block
-write skip, sub-blocked very-wide LLC, DRAM burst model underneath),
-:mod:`~repro.memhier.trace` derives access traces from streaming
-configs / stages / fused programs, and :mod:`~repro.memhier.predict`
-simulates a trace to predicted time, per-level hit/traffic breakdowns,
-and a best-geometry search. See DESIGN.md §3.
+write skip, sub-blocked very-wide LLC, pluggable per-set replacement
+policy, DRAM burst model underneath), :mod:`~repro.memhier.trace`
+derives access traces from streaming configs / stages / fused programs,
+:mod:`~repro.memhier.predict` simulates a trace to predicted time,
+per-level hit/traffic breakdowns, and a best-geometry search, and
+:mod:`~repro.memhier.fastsim` is the phase-structured fast engine the
+scoring hot paths use (bit-identical on periodic traces, reference
+fallback otherwise). See DESIGN.md §3 and §12.
 """
+from .fastsim import simulate_fast
 from .hierarchy import (CacheLevel, Hierarchy, LastLevelCache, PAPER_ULTRA96,
                         PRESETS, TPU_V5E)
 from .predict import (DramStats, LevelStats, Prediction, best_geometry,
@@ -20,6 +24,6 @@ __all__ = [
     "Access", "CacheLevel", "DramStats", "Hierarchy", "LastLevelCache",
     "LevelStats", "PAPER_ULTRA96", "PRESETS", "Prediction", "TPU_V5E",
     "best_geometry", "demand_bytes", "predict_program", "simulate",
-    "stream_bandwidth", "stream_trace", "sweep_llc_blocks", "trace_config",
-    "trace_program", "trace_program_unfused", "trace_stage",
+    "simulate_fast", "stream_bandwidth", "stream_trace", "sweep_llc_blocks",
+    "trace_config", "trace_program", "trace_program_unfused", "trace_stage",
 ]

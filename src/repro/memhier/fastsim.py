@@ -1,0 +1,264 @@
+"""Phase-structured fast engine: exact extrapolation of periodic traces.
+
+The traces :mod:`repro.memhier.trace` generates are *regular*: a
+streaming launch repeats the same per-grid-step phase — one access per
+stream, every stream advancing by one block — thousands of times. The
+reference engine (:func:`repro.memhier.predict.simulate`) pays a pure-
+Python cache walk for every one of those steps; this module pays it only
+until the hierarchy reaches steady state, then jumps.
+
+The algorithm (DESIGN.md §12):
+
+  1. **Detect the phase.** Scan the access list for a periodic run:
+     a period of ``P`` accesses whose (stream, kind, nbytes) signature
+     repeats with a uniform address stride ``S`` per period. Runs are
+     detected per *phase*, so multi-phase traces (e.g.
+     :func:`~repro.memhier.trace.trace_program_unfused`, one phase per
+     unfused stage) fast-path each phase in turn.
+  2. **Super-period.** Group ``k`` periods so the per-super-period
+     stride ``k·S`` is a multiple of every level's block size — then a
+     super-period's effect on the hierarchy is *translation-equivariant*
+     (set indices rotate consistently, sub-block alignment is
+     preserved).
+  3. **Steady state.** Simulate super-periods with the reference engine
+     until the cache state (line addresses, dirty bits, replacement
+     order, PLRU bits) is exactly the previous state translated by
+     ``k·S``. From that point, by equivariance, every remaining
+     super-period adds the *identical* stats delta.
+  4. **Jump.** Add ``remaining × delta`` to the integer counters,
+     translate the cache state by ``remaining × k·S``, and resume the
+     reference engine for the trace tail (truncated final block) and the
+     dirty-line flush.
+
+Because the jump reproduces the exact reference state and the exact
+integer counters (busy times are derived from the counters at the end,
+in :func:`~repro.memhier.predict._prediction`), the result is
+**bit-identical** to the reference engine on every periodic trace —
+``benchmarks/bench_hotpath.py`` and ``tests/test_hotpath.py`` gate this
+on every trace generator. Irregular traces simply never reach step 3 and
+fall through to the reference loop, access by access.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict
+from typing import Iterable, Sequence
+
+from .hierarchy import Hierarchy
+from .predict import (Access, Prediction, _build_sims, _flush, _prediction,
+                      _run_accesses)
+
+# How far ahead to look for the first access's stream recurring (bounds
+# the period length the detector can find; stream_trace periods are one
+# access per stream, so this comfortably covers every generated trace).
+MAX_PERIOD = 64
+
+# Minimum full super-periods for the fast path to engage: one to warm,
+# two to compare, at least one left to extrapolate over.
+MIN_SUPER_PERIODS = 3
+
+_LEVEL_FIELDS = ("hits", "misses", "write_skips", "read_bytes",
+                 "write_bytes", "fill_bytes", "writeback_bytes")
+_DRAM_FIELDS = ("bursts", "read_bytes", "write_bytes")
+
+
+@dataclasses.dataclass(frozen=True)
+class _Run:
+    """One detected periodic run: ``[start, end)`` repeats every
+    ``period`` accesses with uniform address stride ``stride``."""
+
+    period: int
+    stride: int
+    end: int
+
+
+def _find_periodic_run(accesses: Sequence[Access], start: int):
+    """Longest periodic run beginning at ``start``, or None.
+
+    The candidate period is the distance to the first recurrence of the
+    starting access's (stream, kind, nbytes) signature; the run extends
+    while every access matches its predecessor one period back with a
+    uniform address stride.
+    """
+    n = len(accesses)
+    a0 = accesses[start]
+    period = None
+    for j in range(start + 1, min(start + 1 + MAX_PERIOD, n)):
+        b = accesses[j]
+        if (b.stream == a0.stream and b.kind == a0.kind
+                and b.nbytes == a0.nbytes):
+            period = j - start
+            break
+    if period is None:
+        return None
+    stride = accesses[start + period].addr - a0.addr
+    j = start
+    while j + period < n:
+        a, b = accesses[j], accesses[j + period]
+        if (b.stream != a.stream or b.kind != a.kind
+                or b.nbytes != a.nbytes or b.addr - a.addr != stride):
+            break
+        j += 1
+    end = j + period                     # [start, end) is period-periodic
+    if end - start < 2 * period:
+        return None
+    return _Run(period=period, stride=stride, end=end)
+
+
+def _super_period(hier: Hierarchy, stride: int) -> int:
+    """Periods per super-period: smallest k with k·stride a multiple of
+    every level's block size (makes the shift set-index- and sub-block-
+    consistent at every level)."""
+    k = 1
+    for lv in hier.levels:
+        B = lv.block_bytes
+        k = math.lcm(k, B // math.gcd(stride, B))
+    return k
+
+
+def _snapshot(sims, dram):
+    """Deep, comparable copy of (cache state, integer stat counters)."""
+    state = [
+        [[(la, st[0], st[1]) for la, st in lines.items()]
+         for lines in sim.sets]
+        for sim in sims
+    ]
+    stats = (
+        [tuple(getattr(sim.stats, f) for f in _LEVEL_FIELDS)
+         for sim in sims],
+        tuple(getattr(dram.stats, f) for f in _DRAM_FIELDS),
+    )
+    return state, stats
+
+
+def _is_shifted(prev_state, cur_state, sims, stride: int) -> bool:
+    """True iff cur_state is exactly prev_state translated by ``stride``
+    (line addresses shifted, sets rotated, order and bits preserved)."""
+    for sim, prev_lv, cur_lv in zip(sims, prev_state, cur_state):
+        B = sim.level.block_bytes
+        n_sets = len(sim.sets)
+        rot = (stride // B) % n_sets
+        for si in range(n_sets):
+            pset = prev_lv[si]
+            cset = cur_lv[(si + rot) % n_sets]
+            if len(pset) != len(cset):
+                return False
+            for (la, d, m), (cla, cd, cm) in zip(pset, cset):
+                if cla != la + stride or cd != d or cm != m:
+                    return False
+    return True
+
+
+def _apply_stats_delta(sims, dram, prev_stats, cur_stats, times: int) -> None:
+    """Add ``times`` × (cur - prev) to every integer stat counter."""
+    for sim, p, c in zip(sims, prev_stats[0], cur_stats[0]):
+        for f, pv, cv in zip(_LEVEL_FIELDS, p, c):
+            setattr(sim.stats, f, getattr(sim.stats, f) + times * (cv - pv))
+    for f, pv, cv in zip(_DRAM_FIELDS, prev_stats[1], cur_stats[1]):
+        setattr(dram.stats, f, getattr(dram.stats, f) + times * (cv - pv))
+
+
+def _shift_state(sims, delta: int) -> None:
+    """Translate every resident line by ``delta`` bytes in place.
+
+    ``delta`` is a multiple of each level's block size, so all lines of
+    one set land in one rotated set — per-set replacement order (and the
+    PLRU/dirty bits travelling in the line state) is preserved, which is
+    exactly the state the reference engine would have reached.
+    """
+    if delta == 0:
+        return
+    for sim in sims:
+        n_sets = len(sim.sets)
+        B = sim.level.block_bytes
+        new_sets: list[OrderedDict] = [OrderedDict() for _ in range(n_sets)]
+        for lines in sim.sets:
+            for la, st in lines.items():
+                nla = la + delta
+                new_sets[(nla // B) % n_sets][nla] = st
+        sim.sets = new_sets
+
+
+def _extrapolate_run(sims, dram, top, accesses, start: int, run: _Run,
+                     k: int) -> tuple[int, int]:
+    """Consume the full super-periods of one periodic run.
+
+    Simulates super-periods with the reference engine until steady state
+    (state = shift of previous state), then jumps over the rest. Returns
+    (demand bytes accounted, index after the consumed super-periods).
+    """
+    sp = k * run.period                  # accesses per super-period
+    stride = k * run.stride              # bytes per super-period
+    n_super = (run.end - start) // sp
+    if n_super < MIN_SUPER_PERIODS:
+        demand = _run_accesses(top, accesses[start:run.end])
+        return demand, run.end
+    demand_sp = sum(a.nbytes for a in accesses[start:start + sp])
+
+    demand = 0
+    done = 0
+    prev_snap = None
+    next_check = 2
+    take_prev_at = next_check - 1
+    while done < n_super:
+        lo = start + done * sp
+        demand += _run_accesses(top, accesses[lo:lo + sp])
+        done += 1
+        if done == n_super:
+            break
+        if done == take_prev_at:
+            prev_snap = _snapshot(sims, dram)
+        elif done == next_check:
+            snap = _snapshot(sims, dram)
+            if prev_snap is not None and _is_shifted(
+                    prev_snap[0], snap[0], sims, stride):
+                remaining = n_super - done
+                _apply_stats_delta(sims, dram, prev_snap[1], snap[1],
+                                   remaining)
+                _shift_state(sims, remaining * stride)
+                demand += remaining * demand_sp
+                done = n_super
+                break
+            # not steady yet: back off the check cadence ~1.5× so the
+            # state comparison never dominates a long warm-up.
+            next_check += max(1, next_check // 2)
+            take_prev_at = next_check - 1
+            prev_snap = snap if take_prev_at == done else None
+    return demand, start + n_super * sp
+
+
+def simulate_fast(hier: Hierarchy, trace: Iterable[Access],
+                  n_buffers: int = 2) -> Prediction:
+    """Drop-in replacement for :func:`repro.memhier.predict.simulate`.
+
+    Bit-identical results on periodic (streaming) traces in a small
+    fraction of the Python iterations; irregular traces fall back to the
+    reference engine access by access. This is the default scorer behind
+    :func:`~repro.memhier.predict.predict_program`,
+    :func:`~repro.memhier.predict.stream_bandwidth` and therefore the
+    Program geometry negotiation, the graph partitioner's beam search,
+    ``best_geometry``, ``launch/dryrun.py`` roofline terms and the
+    memhier hillclimb.
+    """
+    if n_buffers < 1:
+        raise ValueError(f"n_buffers must be >= 1, got {n_buffers}")
+    accesses = trace if isinstance(trace, (list, tuple)) else list(trace)
+    sims, dram, top = _build_sims(hier)
+    demand = 0
+    i = 0
+    n = len(accesses)
+    while i < n:
+        run = _find_periodic_run(accesses, i)
+        if run is None:
+            # no period detectable here: reference-simulate one detection
+            # window and retry (keeps fully-irregular traces linear).
+            hi = min(i + MAX_PERIOD + 1, n)
+            demand += _run_accesses(top, accesses[i:hi])
+            i = hi
+            continue
+        k = _super_period(hier, run.stride)
+        d, i = _extrapolate_run(sims, dram, top, accesses, i, run, k)
+        demand += d
+    _flush(sims)
+    return _prediction(sims, dram, demand, n_buffers)

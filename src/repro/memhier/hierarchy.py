@@ -58,16 +58,26 @@ class CacheLevel:
         per-access latency; streaming pipelines mostly hide it, so the
         presets keep it small but it participates in busy time.
     n_ways:
-        set associativity: blocks per set, with set-indexed LRU
-        replacement inside each set — so reuse-heavy traces pay conflict
-        misses when hot lines collide on a set. ``None`` (the default)
-        keeps the level fully associative, the pre-associativity
-        behaviour. ``1`` is direct-mapped. When ``n_ways`` does not
-        divide ``n_blocks``, the remainder blocks are unreachable (the
-        modeled capacity is ``n_sets * n_ways``, as in real hardware
-        where sets × ways defines the cache) — prefer geometries where
-        it divides.
+        set associativity: blocks per set, with set-indexed replacement
+        inside each set — so reuse-heavy traces pay conflict misses when
+        hot lines collide on a set. ``None`` (the default) keeps the
+        level fully associative, the pre-associativity behaviour. ``1``
+        is direct-mapped. When ``n_ways`` does not divide ``n_blocks``,
+        the remainder blocks are unreachable (the modeled capacity is
+        ``n_sets * n_ways``, as in real hardware where sets × ways
+        defines the cache) — prefer geometries where it divides.
+    policy:
+        replacement policy inside each set: ``"lru"`` (the default,
+        recency order refreshed on every hit), ``"fifo"`` (insertion
+        order only — hits do not refresh, the cheap-BRAM option a
+        softcore LLC would actually ship), or ``"plru"`` (bit-pseudo-LRU:
+        one MRU bit per line, victim is the first line whose bit is
+        clear; when setting a bit would set them all, the others reset).
+        The engine in :mod:`repro.memhier.predict` honours the policy on
+        hits and on victim selection.
     """
+
+    POLICIES = ("lru", "fifo", "plru")
 
     name: str
     block_bytes: int
@@ -77,6 +87,7 @@ class CacheLevel:
     write_allocate: bool = True
     full_block_write_skips_fetch: bool = True
     n_ways: Optional[int] = None
+    policy: str = "lru"
 
     def __post_init__(self):
         if self.block_bytes <= 0:
@@ -90,6 +101,9 @@ class CacheLevel:
         if self.n_ways is not None and self.n_ways <= 0:
             raise ValueError(f"{self.name}: n_ways must be positive "
                              f"(None = fully associative)")
+        if self.policy not in self.POLICIES:
+            raise ValueError(f"{self.name}: unknown replacement policy "
+                             f"{self.policy!r}; have {self.POLICIES}")
 
     @property
     def n_blocks(self) -> int:
@@ -160,6 +174,22 @@ class Hierarchy:
                     f"{self.name}: {below.name} block ({below.block_bytes} B)"
                     f" must hold whole {above.name} blocks "
                     f"({above.block_bytes} B)")
+
+    def fingerprint(self) -> tuple:
+        """Hashable value identifying this hierarchy's modeled behaviour.
+
+        The dispatch-cache key component in
+        :meth:`repro.core.program.Program.negotiate_geometry` (DESIGN.md
+        §12): any level edit — a mutated LLC block via
+        :meth:`with_llc_block`, a policy change, a different preset —
+        yields a different fingerprint, so cached geometries invalidate;
+        structurally identical hierarchies share cache entries even
+        across distinct objects.
+        """
+        return ("hier",
+                tuple((type(lv).__name__,) + dataclasses.astuple(lv)
+                      for lv in self.levels),
+                self.dram.fingerprint())
 
     @property
     def dl1(self) -> CacheLevel:

@@ -17,14 +17,29 @@ effective bandwidth collapses to the Fig. 3 burst law at the LLC block
 size — that is the validation gate in ``benchmarks/bench_blocksweep.py``.
 
 Approximations (documented, deliberate):
-  * LRU replacement per set (``CacheLevel.n_ways`` sets the
+  * replacement is per set (``CacheLevel.n_ways`` sets the
     associativity; the ``n_ways=None`` default is fully associative —
     no conflict misses; a non-dividing ``n_ways`` models only
-    ``n_sets * n_ways`` blocks of the declared capacity);
+    ``n_sets * n_ways`` blocks of the declared capacity) and follows
+    ``CacheLevel.policy``: ``"lru"`` refreshes recency on every hit,
+    ``"fifo"`` evicts in pure insertion order, ``"plru"`` is bit-
+    pseudo-LRU (an MRU bit per line; victim = first clear bit);
   * a write covering whole sub-blocks allocates without tracking partial
     validity (§3.1.3 valid bits are assumed to work);
   * ``hit_latency_s`` charges busy time but not dependent-access latency
-    (streams are independent).
+    (streams are independent);
+  * ``n_buffers`` (the :class:`~repro.core.stream.StreamConfig`
+    double-buffering depth) sets the overlap model: with ≥ 2 buffers the
+    levels pipeline and the slowest stage sets throughput
+    (``max(busy)``, the §3.1.3/§3.1.4 overlap); a single buffer
+    serialises fill with compute, so the stages' busy times add.
+
+Scoring hot paths (geometry negotiation, the partitioner's beam search,
+``best_geometry``) route every simulation through the phase-structured
+fast engine in :mod:`repro.memhier.fastsim` — exact-by-construction on
+the periodic streaming traces of :mod:`repro.memhier.trace`, falling
+back to the reference :func:`simulate` loop on irregular traces
+(DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -96,6 +111,7 @@ class Prediction:
     dram: DramStats
     bottleneck: str
     scale: float = 1.0            # >1 when a capped trace was extrapolated
+    n_buffers: int = 2            # overlap depth the timing term assumed
 
     @property
     def effective_bw(self) -> float:
@@ -113,26 +129,33 @@ class _DramSim:
         self.model = model
         self.stats = DramStats()
 
-    def _burst(self, nbytes: int) -> None:
-        self.stats.bursts += 1
-        self.stats.busy_s += self.model.overhead_s + nbytes / self.model.peak_bw
-
     def read(self, addr: int, nbytes: int) -> None:
+        self.stats.bursts += 1
         self.stats.read_bytes += nbytes
-        self._burst(nbytes)
 
     def write(self, addr: int, nbytes: int) -> None:
+        self.stats.bursts += 1
         self.stats.write_bytes += nbytes
-        self._burst(nbytes)
+
+    def finish(self) -> None:
+        # busy time derived from the integer burst/byte counters at the
+        # end (not accumulated per burst) so the fast engine's counter
+        # extrapolation reproduces it bit-exactly (DESIGN.md §12).
+        self.stats.busy_s = (self.stats.bursts * self.model.overhead_s
+                             + self.stats.bytes / self.model.peak_bw)
 
 
 class _LevelSim:
+    # Line state is a mutable [dirty, mru] pair: `dirty` drives
+    # writebacks; `mru` is only meaningful under the "plru" policy.
+
     def __init__(self, level: CacheLevel, below):
         self.level = level
         self.below = below
-        # one LRU per set (n_sets == 1 → fully associative, the default).
-        self.sets: list[OrderedDict[int, bool]] = [
-            OrderedDict() for _ in range(level.n_sets)]   # line addr -> dirty
+        self.policy = level.policy
+        # one replacement domain per set (n_sets == 1 → fully associative).
+        self.sets: list[OrderedDict[int, list]] = [
+            OrderedDict() for _ in range(level.n_sets)]
         self.ways = level.ways
         self.stats = LevelStats(name=level.name)
 
@@ -151,14 +174,42 @@ class _LevelSim:
             yield a, csize, la
             a += csize
 
+    def _mark_mru(self, lines: OrderedDict, la: int) -> None:
+        """Bit-PLRU: set the line's MRU bit; if that saturates the set,
+        clear every other bit (the accessed line stays protected)."""
+        lines[la][1] = True
+        if all(st[1] for st in lines.values()):
+            for other, st in lines.items():
+                if other != la:
+                    st[1] = False
+
+    def _touch_hit(self, lines: OrderedDict, la: int, dirty: bool) -> None:
+        if dirty:
+            lines[la][0] = True
+        if self.policy == "lru":
+            lines.move_to_end(la)
+        elif self.policy == "plru":
+            self._mark_mru(lines, la)
+        # fifo: hits never refresh the insertion order.
+
+    def _victim(self, lines: OrderedDict) -> int:
+        if self.policy == "plru":
+            for la, st in lines.items():
+                if not st[1]:
+                    return la
+        return next(iter(lines))      # lru: least-recent; fifo: oldest
+
     def _insert(self, la: int, dirty: bool) -> None:
         lines = self._set(la)
-        lines[la] = dirty
+        lines[la] = [dirty, False]
+        if self.policy == "plru":
+            self._mark_mru(lines, la)
         if len(lines) > self.ways:
-            old, was_dirty = lines.popitem(last=False)
+            victim = self._victim(lines)
+            was_dirty = lines.pop(victim)[0]
             if was_dirty:
                 self.stats.writeback_bytes += self.level.block_bytes
-                self.below.write(old, self.level.block_bytes)
+                self.below.write(victim, self.level.block_bytes)
 
     def read(self, addr: int, nbytes: int) -> None:
         self.stats.read_bytes += nbytes
@@ -167,7 +218,7 @@ class _LevelSim:
             lines = self._set(la)
             if la in lines:
                 self.stats.hits += 1
-                lines.move_to_end(la)
+                self._touch_hit(lines, la, dirty=False)
             else:
                 self.stats.misses += 1
                 self.below.read(la, B)
@@ -182,8 +233,7 @@ class _LevelSim:
             lines = self._set(la)
             if la in lines:
                 self.stats.hits += 1
-                lines[la] = True
-                lines.move_to_end(la)
+                self._touch_hit(lines, la, dirty=True)
                 continue
             self.stats.misses += 1
             covers_subs = (a % sub == 0) and (csize % sub == 0)
@@ -204,8 +254,10 @@ class _LevelSim:
             + self.stats.port_bytes / self.level.bandwidth)
 
 
-def simulate(hier: Hierarchy, trace: Iterable[Access]) -> Prediction:
-    """Run a trace through the hierarchy; returns the full breakdown."""
+# -- engine plumbing shared with the fast engine (repro.memhier.fastsim) ------
+
+def _build_sims(hier: Hierarchy):
+    """Wire up the level sims over DRAM; returns (sims, dram, top)."""
     dram = _DramSim(hier.dram)
     below = dram
     sims: list[_LevelSim] = []
@@ -214,9 +266,13 @@ def simulate(hier: Hierarchy, trace: Iterable[Access]) -> Prediction:
         sims.append(below)
     sims.reverse()                                # core-side first
     top = sims[0] if sims else dram
+    return sims, dram, top
 
+
+def _run_accesses(top, accesses: Iterable[Access]) -> int:
+    """Feed accesses to the top of the hierarchy; returns demand bytes."""
     demand = 0
-    for acc in trace:
+    for acc in accesses:
         demand += acc.nbytes
         if acc.kind == "r":
             top.read(acc.addr, acc.nbytes)
@@ -224,52 +280,101 @@ def simulate(hier: Hierarchy, trace: Iterable[Access]) -> Prediction:
             top.write(acc.addr, acc.nbytes)
         else:
             raise ValueError(f"unknown access kind {acc.kind!r}")
-    # flush: dirty lines eventually drain to DRAM; charge them now so a
-    # write stream's traffic is not hidden by the finite trace.
+    return demand
+
+
+def _flush(sims: Sequence[_LevelSim]) -> None:
+    """Drain dirty lines to DRAM and close per-level busy accounting, so
+    a write stream's traffic is not hidden by the finite trace."""
     for sim in sims:
         for lines in sim.sets:
-            for la, dirty in lines.items():
-                if dirty:
+            for la, st in lines.items():
+                if st[0]:
                     sim.stats.writeback_bytes += sim.level.block_bytes
                     sim.below.write(la, sim.level.block_bytes)
             lines.clear()
         sim.finish()
 
+
+def _prediction(sims, dram, demand: int, n_buffers: int) -> Prediction:
+    """Assemble the Prediction from finished sims (shared result path)."""
+    dram.finish()
     busy = {st.stats.name: st.stats.busy_s for st in sims}
     busy["dram"] = dram.stats.busy_s
     bottleneck = max(busy, key=busy.get) if busy else "dram"
+    if not busy:
+        time_s = 0.0
+    elif n_buffers >= 2:
+        # §3.1.3/§3.1.4 + the Pallas grid pipeline: double-buffered
+        # streams overlap all levels, the slowest stage sets throughput.
+        time_s = max(busy.values())
+    else:
+        # single-buffered: each fill serialises with compute, stages add.
+        time_s = sum(busy.values())
     return Prediction(
-        time_s=max(busy.values()) if busy else 0.0,
+        time_s=time_s,
         demand_bytes=demand,
         levels=tuple(st.stats for st in sims),
         dram=dram.stats,
         bottleneck=bottleneck,
+        n_buffers=n_buffers,
     )
+
+
+def simulate(hier: Hierarchy, trace: Iterable[Access],
+             n_buffers: int = 2) -> Prediction:
+    """Run a trace through the hierarchy; returns the full breakdown.
+
+    This is the reference engine: every access walks every level.
+    ``n_buffers`` is the DMA double-buffering depth (see module
+    docstring); the default 2 keeps the historical fully-overlapped
+    timing term. :func:`repro.memhier.fastsim.simulate_fast` is the
+    drop-in phase-structured engine the scoring hot paths use.
+    """
+    if n_buffers < 1:
+        raise ValueError(f"n_buffers must be >= 1, got {n_buffers}")
+    sims, dram, top = _build_sims(hier)
+    demand = _run_accesses(top, trace)
+    _flush(sims)
+    return _prediction(sims, dram, demand, n_buffers)
 
 
 # -- convenience predictors ---------------------------------------------------
 
+def _engine(engine):
+    """Resolve the simulation engine: default = the phase-structured fast
+    engine (exact on periodic traces, reference fallback otherwise)."""
+    if engine is not None:
+        return engine
+    from .fastsim import simulate_fast       # deferred: fastsim imports us
+    return simulate_fast
+
+
 def stream_bandwidth(hier: Hierarchy, n_bytes: int,
                      block_bytes: Optional[int] = None,
                      n_read: int = 1, n_write: int = 0,
-                     max_sim_bytes: int = MAX_SIM_BYTES) -> Prediction:
+                     max_sim_bytes: int = MAX_SIM_BYTES,
+                     n_buffers: int = 2, engine=None) -> Prediction:
     """Predict a pure streaming workload (the Fig. 3 memcpy shape).
 
     ``block_bytes`` is the per-step access size (defaults to the LLC
     block — one access per burst). Large workloads are simulated capped
     and extrapolated linearly (cold-miss streams have constant per-byte
     cost); the returned stats describe the simulated window, ``time_s``
-    and ``demand_bytes`` the full workload.
+    and ``demand_bytes`` the full workload. ``engine`` defaults to the
+    fast phase-structured engine; pass :func:`simulate` to force the
+    reference loop.
     """
+    run = _engine(engine)
     block = block_bytes or hier.llc.block_bytes
     if n_bytes <= 0:
-        return simulate(hier, ())
+        return run(hier, (), n_buffers=n_buffers)
     sim_bytes = min(n_bytes, max(round_up(max_sim_bytes, block), 4 * block))
     sim_bytes = round_up(sim_bytes, block) if sim_bytes < n_bytes else sim_bytes
     trace = stream_trace(sim_bytes, block,
                          [f"in{i}" for i in range(n_read)],
                          [f"out{i}" for i in range(n_write)])
-    pred = simulate(hier, trace)
+    pred = run(hier, trace, n_buffers=n_buffers)
     scale = n_bytes / sim_bytes
     if scale > 1.0:
         pred.time_s *= scale
@@ -281,7 +386,9 @@ def stream_bandwidth(hier: Hierarchy, n_bytes: int,
 def predict_program(hier: Hierarchy, program, n_elems: int, dtype,
                     block_rows: Optional[int] = None,
                     block_cols: Optional[int] = None,
-                    max_sim_bytes: int = MAX_SIM_BYTES) -> Prediction:
+                    max_sim_bytes: int = MAX_SIM_BYTES,
+                    n_buffers: Optional[int] = None,
+                    engine=None) -> Prediction:
     """Predicted execution profile of one fused Program launch.
 
     The LLC block is pinned to the DMA block (one grid step = one burst
@@ -290,9 +397,12 @@ def predict_program(hier: Hierarchy, program, n_elems: int, dtype,
     hierarchy's own LLC block — so sweeping hierarchy parameters (e.g.
     ``experiments/hillclimb.py memhier``) moves the prediction; the
     Program negotiation passes explicit candidates instead. Large
-    ``n_elems`` are capped and extrapolated.
+    ``n_elems`` are capped and extrapolated. ``n_buffers`` defaults to
+    the program's own double-buffering depth; ``engine`` to the fast
+    phase-structured engine.
     """
     from repro.core.stream import LANES
+    run = _engine(engine)
     stages = program.stages
     bits = _bits(dtype)
     if block_rows is None:
@@ -301,14 +411,17 @@ def predict_program(hier: Hierarchy, program, n_elems: int, dtype,
         target_elems = max(1, hier.llc.block_bytes * 8 // bits)
         block_cols = max(LANES,
                          target_elems // (block_rows * LANES) * LANES)
+    if n_buffers is None:
+        n_buffers = getattr(program, "n_buffers", 2)
     block_elems = block_rows * block_cols
     elem_bytes = max(1, bits // 8)
     cap_elems = max(4 * block_elems, max_sim_bytes // elem_bytes)
     n_sim = min(n_elems, cap_elems)
     h = hier.with_llc_block(block_elems * bits // 8)
-    pred = simulate(h, trace_program(program, n_sim, dtype,
-                                     block_rows=block_rows,
-                                     block_cols=block_cols))
+    pred = run(h, trace_program(program, n_sim, dtype,
+                                block_rows=block_rows,
+                                block_cols=block_cols),
+               n_buffers=n_buffers)
     padded = round_up(max(n_elems, 1), block_elems)
     padded_sim = round_up(max(n_sim, 1), block_elems)
     scale = padded / padded_sim

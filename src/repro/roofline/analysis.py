@@ -118,6 +118,10 @@ def hierarchy_memory_term(hbm_bytes: float, hierarchy,
     law: the DRAM burst overhead at the hierarchy's (or the given) block
     size and any slower intermediate level are both charged, so small
     blocks cost more than peak-bandwidth accounting admits.
+
+    Runs on the phase-structured fast engine (via ``stream_bandwidth``'s
+    default; DESIGN.md §12), so per-cell dry-run roofline terms cost
+    milliseconds even at the 2^24-byte simulation cap.
     """
     from repro.memhier.predict import stream_bandwidth   # deferred import
     n = int(math.ceil(hbm_bytes))

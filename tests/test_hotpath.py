@@ -1,0 +1,418 @@
+"""Hot-path overhaul (ISSUE 4): dispatch caches, fast engine, overlap.
+
+Covers the DESIGN.md §12 contracts:
+
+  * geometry/dispatch caching — warm ``Program.__call__`` renegotiates
+    and re-traces nothing; model swaps (BurstModel ↔ Hierarchy) and
+    model edits (mutated LLC block) invalidate via fingerprints;
+    distinct dtypes/sizes occupy distinct cache entries; re-tracing is
+    observable through the traced-call counter;
+  * the phase-structured fast engine — bit-identical to the reference
+    ``simulate()`` on every trace generator, every preset, every
+    replacement policy, including irregular traces (fallback) and
+    truncated tails;
+  * pluggable replacement policies — FIFO ≠ LRU on a reuse trace,
+    bit-PLRU protects referenced lines, bad names rejected;
+  * ``n_buffers`` in the timing term — single-buffered streams
+    serialise (sum of busy times), double-buffered overlap (max);
+  * plan overlap — part-DAG levels, critical-path ``predicted_time``
+    strictly below the serial sum and never below the slowest chain.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401 — registers the ISA
+from repro.core import isa
+from repro.core import program as prog_mod
+from repro.core.burst_model import BurstModel, TPU_V5E_HBM
+from repro.core.program import Program
+from repro.core.stream import StreamConfig
+from repro.graph import partition, plan_from_chains
+from repro.kernels.ops import c0_pipeline_graph
+from repro.memhier import (Access, CacheLevel, Hierarchy, PAPER_ULTRA96,
+                           TPU_V5E, predict_program, simulate, simulate_fast,
+                           stream_trace, trace_config, trace_program,
+                           trace_program_unfused, trace_stage)
+
+DRAM = BurstModel(peak_bw=1e9, overhead_s=64e-9)
+N = 1 << 18
+
+
+def tiny_hier(policy="lru", n_blocks=2):
+    level = CacheLevel("l1", block_bytes=64,
+                       capacity_bytes=64 * n_blocks,
+                       bandwidth=1e12, policy=policy)
+    return Hierarchy("tiny", (level,), DRAM)
+
+
+def reads(*addrs):
+    return [Access(a, 64, "r", "x") for a in addrs]
+
+
+@pytest.fixture
+def fresh_caches():
+    prog_mod.clear_dispatch_caches()
+    prog_mod.reset_dispatch_stats()
+    yield
+    prog_mod.clear_dispatch_caches()
+
+
+def two_stage_program(**kw):
+    stages = tuple(isa.get(n).template.stage()
+                   for n in ("c0_scale", "c0_add"))
+    return Program(stages, **kw)
+
+
+# ---------------------------------------------------------------------------
+# dispatch / geometry caching
+# ---------------------------------------------------------------------------
+
+class TestGeometryCache:
+    def test_second_negotiation_hits(self, fresh_caches):
+        prog = two_stage_program()
+        first = prog.negotiate_geometry(N, jnp.float32)
+        misses = prog_mod.DISPATCH_STATS.geometry_misses
+        second = prog.negotiate_geometry(N, jnp.float32)
+        assert second == first
+        assert prog_mod.DISPATCH_STATS.geometry_misses == misses
+        assert prog_mod.DISPATCH_STATS.geometry_hits >= 1
+
+    def test_equivalent_program_shares_cache(self, fresh_caches):
+        a, b = two_stage_program(), two_stage_program()
+        a.negotiate_geometry(N, jnp.float32)
+        misses = prog_mod.DISPATCH_STATS.geometry_misses
+        b.negotiate_geometry(N, jnp.float32)
+        assert prog_mod.DISPATCH_STATS.geometry_misses == misses
+
+    def test_model_swap_invalidates(self, fresh_caches):
+        prog = two_stage_program(model=TPU_V5E_HBM)
+        prog.negotiate_geometry(N, jnp.float32)
+        misses = prog_mod.DISPATCH_STATS.geometry_misses
+        prog.model = TPU_V5E                      # BurstModel -> Hierarchy
+        prog.negotiate_geometry(N, jnp.float32)
+        assert prog_mod.DISPATCH_STATS.geometry_misses == misses + 1
+        prog.model = TPU_V5E_HBM                  # back: cached, no miss
+        prog.negotiate_geometry(N, jnp.float32)
+        assert prog_mod.DISPATCH_STATS.geometry_misses == misses + 1
+
+    def test_mutated_llc_block_invalidates(self, fresh_caches):
+        prog = two_stage_program(model=TPU_V5E)
+        prog.negotiate_geometry(N, jnp.float32)
+        misses = prog_mod.DISPATCH_STATS.geometry_misses
+        prog.model = TPU_V5E.with_llc_block(128 * 1024)
+        prog.negotiate_geometry(N, jnp.float32)
+        assert prog_mod.DISPATCH_STATS.geometry_misses == misses + 1
+
+    def test_distinct_dtypes_and_sizes_distinct_entries(self, fresh_caches):
+        prog = two_stage_program()
+        prog.negotiate_geometry(N, jnp.float32)
+        m = prog_mod.DISPATCH_STATS.geometry_misses
+        prog.negotiate_geometry(N, jnp.bfloat16)      # new dtype -> miss
+        assert prog_mod.DISPATCH_STATS.geometry_misses == m + 1
+        prog.negotiate_geometry(N * 16, jnp.float32)  # new size -> miss
+        assert prog_mod.DISPATCH_STATS.geometry_misses == m + 2
+        assert len(prog_mod._GEOMETRY_CACHE) == 3
+
+    def test_no_fit_failure_is_cached_and_reraised(self, fresh_caches):
+        prog = two_stage_program(vmem_budget=1024)
+        with pytest.raises(ValueError, match="VMEM budget"):
+            prog.negotiate_geometry(1 << 20, jnp.float32)
+        misses = prog_mod.DISPATCH_STATS.geometry_misses
+        with pytest.raises(ValueError, match="VMEM budget"):
+            prog.negotiate_geometry(1 << 20, jnp.float32)
+        assert prog_mod.DISPATCH_STATS.geometry_misses == misses
+
+    def test_fingerprints_value_based(self):
+        assert TPU_V5E.fingerprint() == dataclasses.replace(
+            TPU_V5E).fingerprint()
+        assert (TPU_V5E.fingerprint()
+                != TPU_V5E.with_llc_block(1 << 16).fingerprint())
+        assert TPU_V5E_HBM.fingerprint() != DRAM.fingerprint()
+
+
+class TestWarmDispatch:
+    def test_warm_call_no_renegotiation_no_retrace(self, fresh_caches):
+        rng = np.random.default_rng(0)
+        prog = two_stage_program()
+        x = jnp.asarray(rng.standard_normal(3000), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(3000), jnp.float32)
+        first = prog(2.0, x, b, interpret=True)
+        snap = dataclasses.replace(prog_mod.DISPATCH_STATS)
+        second = prog(2.0, x, b, interpret=True)
+        s = prog_mod.DISPATCH_STATS
+        assert s.geometry_misses == snap.geometry_misses
+        assert s.geometry_hits == snap.geometry_hits   # dispatch table hit
+        assert s.kernel_traces == snap.kernel_traces
+        assert s.call_builds == snap.call_builds
+        np.testing.assert_allclose(np.asarray(second), np.asarray(first))
+
+    def test_new_shape_retraces_once(self, fresh_caches):
+        rng = np.random.default_rng(0)
+        prog = two_stage_program()
+        x = jnp.asarray(rng.standard_normal(3000), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(3000), jnp.float32)
+        prog(2.0, x, b, interpret=True)
+        traces = prog_mod.DISPATCH_STATS.kernel_traces
+        y = jnp.asarray(rng.standard_normal(100_000), jnp.float32)
+        c = jnp.asarray(rng.standard_normal(100_000), jnp.float32)
+        prog(2.0, y, c, interpret=True)               # cold for this bucket
+        assert prog_mod.DISPATCH_STATS.kernel_traces > traces
+        traces = prog_mod.DISPATCH_STATS.kernel_traces
+        prog(2.0, y, c, interpret=True)               # warm again
+        assert prog_mod.DISPATCH_STATS.kernel_traces == traces
+
+    def test_warm_dispatch_result_matches_ref(self, fresh_caches):
+        rng = np.random.default_rng(1)
+        fused = isa.fuse("c0_scale", "c0_add")
+        x = jnp.asarray(rng.standard_normal(2500), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(2500), jnp.float32)
+        want = fused(0.5, x, b, mode="ref")
+        for _ in range(2):
+            got = fused(0.5, x, b, mode="interpret")
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-6)
+
+
+class TestFuseCache:
+    def test_repeat_fuse_returns_same_object(self):
+        isa.registry._fuse_cache.clear()
+        a = isa.fuse("c0_scale", "c0_add")
+        b = isa.fuse("c0_scale", "c0_add")
+        assert a is b
+        assert isa.fuse("c0_add", "c0_copy") is not a
+
+    def test_reregistration_invalidates(self):
+        a = isa.fuse("c0_scale", "c0_add")
+        isa.registry.register(isa.get("c0_scale"), overwrite=True)
+        b = isa.fuse("c0_scale", "c0_add")
+        assert a is not b
+
+
+# ---------------------------------------------------------------------------
+# fast engine
+# ---------------------------------------------------------------------------
+
+def _trace_cases(hier):
+    prog = isa.fuse("c0_scale", "c0_add").program
+    stage = isa.get("c0_add").template.stage()
+    return {
+        "stream": stream_trace(1 << 21, hier.llc.block_bytes,
+                               ["a", "b"], ["o"]),
+        "stream_truncated": stream_trace((1 << 21) + 333,
+                                         hier.llc.block_bytes, ["a"], ["o"]),
+        "config": trace_config(StreamConfig(), 1 << 19, jnp.float32,
+                               n_in=2, n_out=1),
+        "stage": trace_stage(stage, N, jnp.float32),
+        "program": trace_program(prog, N, jnp.float32),
+        "program_unfused": trace_program_unfused(prog, N, jnp.float32),
+    }
+
+
+class TestFastEngine:
+    @pytest.mark.parametrize("hier", [PAPER_ULTRA96, TPU_V5E],
+                             ids=lambda h: h.name)
+    def test_exact_on_every_generator(self, hier):
+        for tag in _trace_cases(hier):
+            ref = simulate(hier, _trace_cases(hier)[tag])
+            fast = simulate_fast(hier, _trace_cases(hier)[tag])
+            assert ref == fast, f"{hier.name}/{tag}"
+
+    @pytest.mark.parametrize("policy", CacheLevel.POLICIES)
+    def test_exact_under_every_policy(self, policy):
+        hier = dataclasses.replace(
+            PAPER_ULTRA96,
+            levels=tuple(dataclasses.replace(lv, policy=policy)
+                         for lv in PAPER_ULTRA96.levels))
+        prog = isa.fuse("c0_scale", "c0_add").program
+        trace = list(trace_program(prog, N, jnp.float32))
+        assert simulate(hier, trace) == simulate_fast(hier, trace)
+
+    @pytest.mark.parametrize("n_buffers", [1, 2])
+    def test_exact_for_both_buffer_depths(self, n_buffers):
+        trace = list(stream_trace(1 << 20, PAPER_ULTRA96.llc.block_bytes,
+                                  ["a"], ["o"]))
+        assert (simulate(PAPER_ULTRA96, trace, n_buffers=n_buffers)
+                == simulate_fast(PAPER_ULTRA96, trace, n_buffers=n_buffers))
+
+    def test_irregular_trace_falls_back_exactly(self):
+        rng = np.random.default_rng(7)
+        hier = tiny_hier(n_blocks=4)
+        trace = [Access(int(a) * 64, 64, "r" if k < 0.7 else "w",
+                        f"s{int(a) % 3}")
+                 for a, k in zip(rng.integers(0, 64, 500),
+                                 rng.random(500))]
+        assert simulate(hier, list(trace)) == simulate_fast(hier,
+                                                            list(trace))
+
+    def test_empty_trace(self):
+        assert simulate(TPU_V5E, ()) == simulate_fast(TPU_V5E, ())
+
+    def test_reuse_loop_trace_is_exact(self):
+        # stride-0 periodicity: the same blocks touched every period.
+        hier = tiny_hier(n_blocks=4)
+        trace = reads(0, 64, 128) * 200
+        ref, fast = simulate(hier, list(trace)), simulate_fast(hier,
+                                                               list(trace))
+        assert ref == fast
+        assert ref.levels[0].hit_rate > 0.9
+
+    def test_rejects_bad_n_buffers(self):
+        with pytest.raises(ValueError, match="n_buffers"):
+            simulate_fast(TPU_V5E, (), n_buffers=0)
+        with pytest.raises(ValueError, match="n_buffers"):
+            simulate(TPU_V5E, (), n_buffers=0)
+
+
+# ---------------------------------------------------------------------------
+# replacement policies
+# ---------------------------------------------------------------------------
+
+class TestPolicies:
+    # A B A C A on a 2-line cache: LRU keeps the reused A, FIFO evicts it.
+    REUSE = (0, 64, 0, 128, 0)
+
+    def test_lru_keeps_reused_line(self):
+        pred = simulate(tiny_hier("lru"), reads(*self.REUSE))
+        assert pred.levels[0].hits == 2
+        assert pred.levels[0].misses == 3
+
+    def test_fifo_differs_from_lru_on_reuse(self):
+        pred = simulate(tiny_hier("fifo"), reads(*self.REUSE))
+        assert pred.levels[0].hits == 1           # second A already evicted
+        assert pred.levels[0].misses == 4
+        lru = simulate(tiny_hier("lru"), reads(*self.REUSE))
+        assert pred.levels[0].misses > lru.levels[0].misses
+
+    def test_streaming_trace_policy_invariant(self):
+        # cold-miss streams never revisit a line: policy cannot matter.
+        preds = [simulate(tiny_hier(p),
+                          list(stream_trace(1 << 16, 64, ["a"], ["o"])))
+                 for p in CacheLevel.POLICIES]
+        assert preds[0] == preds[1] == preds[2]
+
+    def test_plru_protects_referenced_line(self):
+        # fill 4 ways; re-reference line 0; next insert must not evict it.
+        h = tiny_hier("plru", n_blocks=4)
+        pred = simulate(h, reads(0, 64, 128, 192, 0, 256, 0))
+        # the final read of 0 hits: 0 was MRU-protected when 256 evicted
+        assert pred.levels[0].hits == 2
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError, match="policy"):
+            CacheLevel("l1", block_bytes=64, capacity_bytes=128,
+                       bandwidth=1e9, policy="random")
+
+    def test_policy_changes_fingerprint(self):
+        assert (tiny_hier("lru").fingerprint()
+                != tiny_hier("fifo").fingerprint())
+
+
+# ---------------------------------------------------------------------------
+# n_buffers timing term
+# ---------------------------------------------------------------------------
+
+class TestNBuffers:
+    def test_single_buffer_serialises_stages(self):
+        trace = list(stream_trace(1 << 20, PAPER_ULTRA96.llc.block_bytes,
+                                  ["a"], ["o"]))
+        d2 = simulate(PAPER_ULTRA96, trace, n_buffers=2)
+        d1 = simulate(PAPER_ULTRA96, trace, n_buffers=1)
+        busys = [lv.busy_s for lv in d1.levels] + [d1.dram.busy_s]
+        assert d1.time_s == pytest.approx(sum(busys))
+        assert d2.time_s == pytest.approx(max(busys))
+        assert d1.time_s > d2.time_s
+        assert d1.dram == d2.dram                 # traffic is unchanged
+
+    def test_program_n_buffers_threads_into_prediction(self):
+        prog1 = two_stage_program(model=TPU_V5E, n_buffers=1)
+        prog2 = two_stage_program(model=TPU_V5E, n_buffers=2)
+        p1 = predict_program(TPU_V5E, prog1, N, jnp.float32)
+        p2 = predict_program(TPU_V5E, prog2, N, jnp.float32)
+        assert p1.n_buffers == 1 and p2.n_buffers == 2
+        assert p1.time_s >= p2.time_s
+
+    def test_n_buffers_in_geometry_cache_key(self, fresh_caches):
+        two_stage_program(n_buffers=1).negotiate_geometry(N, jnp.float32)
+        m = prog_mod.DISPATCH_STATS.geometry_misses
+        two_stage_program(n_buffers=2).negotiate_geometry(N, jnp.float32)
+        assert prog_mod.DISPATCH_STATS.geometry_misses == m + 1
+
+    def test_single_buffer_halves_footprint(self):
+        cfg1 = StreamConfig(n_buffers=1)
+        cfg2 = StreamConfig(n_buffers=2)
+        assert cfg2.vmem_footprint_bytes(3) == 2 * cfg1.vmem_footprint_bytes(3)
+
+
+# ---------------------------------------------------------------------------
+# plan overlap
+# ---------------------------------------------------------------------------
+
+class TestPlanOverlap:
+    def test_independent_branch_overlaps(self):
+        g = c0_pipeline_graph("axpby_residual")
+        plan = partition(g, model=TPU_V5E, n_elems=N, method="beam")
+        assert plan.n_parts >= 2
+        t = plan.predicted_time()
+        serial = plan.predicted_time(overlap=False)
+        from repro.graph.partition import part_cost
+        slowest = max(part_cost(p, N, jnp.float32, TPU_V5E)
+                      for p in plan.parts)
+        assert t < serial
+        assert t >= slowest - 1e-18
+
+    def test_diamond_of_singletons_matches_critical_path(self):
+        # nodes: 0=scale, 1=add(0,b), 2=copy(1), 3=triad (independent)
+        g = c0_pipeline_graph("axpby_residual")
+        plan = plan_from_chains(g, [[0], [1], [2], [3]],
+                                model=TPU_V5E, n_elems=N)
+        from repro.graph.partition import part_cost
+        costs = [part_cost(p, N, jnp.float32, TPU_V5E) for p in plan.parts]
+        serial = plan.predicted_time(overlap=False)
+        t = plan.predicted_time()
+        chain = costs[0] + costs[1] + costs[2]    # the dependent chain
+        assert serial == pytest.approx(sum(costs))
+        assert t == pytest.approx(max(chain, costs[3]))
+        assert t < serial
+
+    def test_part_deps_and_schedule(self):
+        g = c0_pipeline_graph("axpby_residual")
+        plan = plan_from_chains(g, [[0], [1], [2], [3]],
+                                model=TPU_V5E, n_elems=N)
+        deps = plan.part_deps()
+        assert deps[0] == frozenset()
+        assert deps[1] == frozenset({0})
+        assert deps[2] == frozenset({1})
+        assert deps[3] == frozenset()             # triad: independent
+        levels = plan.schedule()
+        assert levels[0] == (0, 3)                # both roots first
+        assert levels[1] == (1,) and levels[2] == (2,)
+
+    def test_serial_chain_overlap_equals_sum(self):
+        g = c0_pipeline_graph("diamond")          # scale -> copy -> add(a)
+        plan = plan_from_chains(g, [[0], [1], [2]],
+                                model=TPU_V5E, n_elems=N)
+        assert plan.predicted_time() == pytest.approx(
+            plan.predicted_time(overlap=False))
+
+    def test_levelled_execution_matches_oracle(self):
+        rng = np.random.default_rng(3)
+        for kind in ("axpby_residual", "saxpby", "diamond"):
+            g = c0_pipeline_graph(kind)
+            plan = partition(g, model=TPU_V5E, n_elems=N)
+            args = []
+            for _, key in g.free_inputs():
+                if hasattr(key, "nid"):
+                    args.append(jnp.asarray(rng.standard_normal(2048),
+                                            jnp.float32))
+                else:
+                    args.append(float(rng.standard_normal()))
+            want = plan.ref(*args)
+            got = plan(*args, mode="interpret")
+            wants = want if isinstance(want, tuple) else (want,)
+            gots = got if isinstance(got, tuple) else (got,)
+            for w, o in zip(wants, gots):
+                np.testing.assert_allclose(np.asarray(o), np.asarray(w),
+                                           rtol=1e-6, atol=1e-6)
