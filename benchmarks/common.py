@@ -9,13 +9,24 @@ import jax
 # whole run machine-readably (the BENCH_*.json perf trajectory).
 RESULTS: list[dict] = []
 
+# Noise-aware wall-clock rows need at least this many samples before the
+# regression gate will compare medians (benchmarks/regression.py).
+MIN_SAMPLES = 5
+
 
 def reset_results() -> None:
     RESULTS.clear()
 
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall seconds per call of a jitted fn (CPU relative numbers)."""
+def median(xs) -> float:
+    s = sorted(xs)
+    return s[len(s) // 2]
+
+
+def time_samples(fn, *args, warmup: int = 2, iters: int = MIN_SAMPLES
+                 ) -> list[float]:
+    """Per-call wall seconds of a jitted fn, one entry per timed iter —
+    the raw material for median-of-k wall-clock rows."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -23,13 +34,33 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2]
+    return ts
 
 
-def row(name: str, us_per_call: float, derived: str = "") -> str:
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call of a jitted fn (CPU relative numbers)."""
+    return median(time_samples(fn, *args, warmup=warmup, iters=iters))
+
+
+def row(name: str, us_per_call: float, derived: str = "",
+        samples: list[float] | None = None) -> str:
+    """Emit one result row; ``samples`` (per-call **microseconds**, k ≥
+    :data:`MIN_SAMPLES`) marks a wall-clock row whose median the CI
+    regression gate may compare against the previous run's median —
+    the noise-aware baseline for non-deterministic rows."""
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line)
-    RESULTS.append({"name": name, "us_per_call": us_per_call,
-                    "derived": derived})
+    rec = {"name": name, "us_per_call": us_per_call, "derived": derived}
+    if samples is not None:
+        rec["samples"] = [float(s) for s in samples]
+    RESULTS.append(rec)
     return line
+
+
+def sampled_row(name: str, fn, *args, derived: str = "",
+                iters: int = MIN_SAMPLES) -> list[float]:
+    """Time ``fn`` ``iters`` times and emit a median-of-k wall row with
+    its samples attached; returns the per-call microsecond samples."""
+    samples_us = [t * 1e6 for t in time_samples(fn, *args, iters=iters)]
+    row(name, median(samples_us), derived, samples=samples_us)
+    return samples_us

@@ -5,23 +5,29 @@
 
 Compares the machine-readable rows ``benchmarks.run --json`` emits
 against the previous run's artifact (a file, or a directory of
-``BENCH_*.json`` to merge) and exits non-zero when any matching row's
-``us_per_call`` regressed by more than ``--threshold`` (default 25%).
+``BENCH_*.json`` to merge) and exits non-zero when any matching row
+regressed beyond its threshold.
 
-Only *modeled*-time rows are gated — names matching one of the
-``--pattern`` substrings (default: ``predicted``, ``modeled``,
-``overlap``, ``best_hand``) AND carrying a positive ``us_per_call`` —
-because those are deterministic model outputs: a regression means the
-cost model or the search genuinely got worse, not that the CI runner was
-busy. Wall-clock rows are reported for context but never fail the gate.
-Suites are expected to emit at least one numeric modeled row each (e.g.
-``memhier_predicted_*_us``, ``graph_axpby_predicted_us``,
-``hotpath_fast_predicted_us``, ``hotpath_plan_overlap_us``) so the gate
-has teeth beyond a single suite.
+Two row classes, two gates:
 
-Missing previous artifacts (first run, expired retention) skip the
-comparison with a notice and exit 0 — the gate only ever compares runs
-that actually have a baseline.
+  * **Modeled-time rows** — names matching one of the ``--pattern``
+    substrings (default: ``predicted``, ``modeled``, ``overlap``,
+    ``best_hand``) AND carrying a positive ``us_per_call`` — gate on the
+    raw value with ``--threshold`` (default 25%), because those are
+    deterministic model outputs: a regression means the cost model or
+    the search genuinely got worse, not that the CI runner was busy.
+  * **Wall-clock rows** — rows whose JSON carries a ``samples`` list of
+    k ≥ 5 per-call microsecond measurements on BOTH sides — gate on the
+    **median of samples** with the looser ``--wall-threshold`` (default
+    60%). Median-of-k is the noise-aware baseline: one GC pause or a
+    busy CI neighbour shifts a single sample, not the median, so the
+    gate has teeth against real slowdowns (a lost coalescing win, a
+    warm path re-tracing) without flaking on scheduler jitter.
+
+Wall-clock rows without samples are reported for context but never fail
+the gate. Missing previous artifacts (first run, expired retention) skip
+the comparison with a notice and exit 0 — the gate only ever compares
+runs that actually have a baseline.
 """
 from __future__ import annotations
 
@@ -30,6 +36,10 @@ import glob
 import json
 import os
 import sys
+
+# single source of truth with the emitting side (common.sampled_row):
+# if the two constants drifted, sampled rows would silently stop gating.
+from .common import MIN_SAMPLES, median as _median
 
 DEFAULT_PATTERNS = ("predicted", "modeled", "overlap", "best_hand")
 
@@ -64,25 +74,41 @@ def load_rows(path: str, required: bool = False) -> dict[str, dict]:
     return rows
 
 
+def _wall_gated(o: dict, n: dict) -> bool:
+    """A wall row gates iff both sides carry >= MIN_SAMPLES samples."""
+    return (len(o.get("samples") or ()) >= MIN_SAMPLES
+            and len(n.get("samples") or ()) >= MIN_SAMPLES)
+
+
 def compare(old: dict[str, dict], new: dict[str, dict],
-            threshold: float, patterns) -> list[str]:
+            threshold: float, patterns,
+            wall_threshold: float = 0.60) -> list[str]:
     """Returns the list of failed-gate descriptions (empty = pass)."""
     failures = []
     for name in sorted(set(old) & set(new)):
-        o, n = old[name]["us_per_call"], new[name]["us_per_call"]
-        if o <= 0 or n <= 0:
+        o, n = old[name], new[name]
+        modeled = any(pat in name for pat in patterns)
+        if modeled:
+            ov, nv = o["us_per_call"], n["us_per_call"]
+            limit, cls = threshold, "gated"
+        elif _wall_gated(o, n):
+            ov, nv = _median(o["samples"]), _median(n["samples"])
+            limit, cls = wall_threshold, "wall-gated"
+        else:
+            ov, nv = o["us_per_call"], n["us_per_call"]
+            limit, cls = None, "info"
+        if ov <= 0 or nv <= 0:
             continue
-        ratio = n / o
-        gated = any(pat in name for pat in patterns)
+        ratio = nv / ov
         verdict = "OK"
-        if ratio > 1.0 + threshold:
-            verdict = "REGRESSED" if gated else "noisy (not gated)"
-            if gated:
-                failures.append(
-                    f"{name}: {o:.2f} -> {n:.2f} us_per_call "
-                    f"({ratio:.2f}x > {1 + threshold:.2f}x)")
-        print(f"{name},{o:.2f},{n:.2f},{ratio:.2f}x,"
-              f"{'gated' if gated else 'info'},{verdict}")
+        if limit is not None and ratio > 1.0 + limit:
+            verdict = "REGRESSED"
+            failures.append(
+                f"{name}: {ov:.2f} -> {nv:.2f} us_per_call "
+                f"({ratio:.2f}x > {1 + limit:.2f}x, {cls})")
+        elif limit is None and ratio > 1.0 + threshold:
+            verdict = "noisy (not gated)"
+        print(f"{name},{ov:.2f},{nv:.2f},{ratio:.2f}x,{cls},{verdict}")
     return failures
 
 
@@ -93,7 +119,11 @@ def main(argv=None) -> None:
     p.add_argument("--new", required=True, action="append",
                    help="fresh BENCH_*.json (repeatable)")
     p.add_argument("--threshold", type=float, default=0.25,
-                   help="allowed fractional increase (default 0.25 = 25%%)")
+                   help="allowed fractional increase on modeled rows "
+                        "(default 0.25 = 25%%)")
+    p.add_argument("--wall-threshold", type=float, default=0.60,
+                   help="allowed fractional increase of the median on "
+                        "sampled wall-clock rows (default 0.60 = 60%%)")
     p.add_argument("--pattern", action="append", default=None,
                    help="row-name substring to gate on (repeatable; "
                         f"default {list(DEFAULT_PATTERNS)})")
@@ -113,10 +143,11 @@ def main(argv=None) -> None:
 
     patterns = tuple(args.pattern) if args.pattern else DEFAULT_PATTERNS
     print("name,old_us,new_us,ratio,class,verdict")
-    failures = compare(old, new, args.threshold, patterns)
+    failures = compare(old, new, args.threshold, patterns,
+                       wall_threshold=args.wall_threshold)
     matched = len(set(old) & set(new))
     print(f"regression: {matched} matching rows, "
-          f"{len(failures)} over the {args.threshold:.0%} threshold")
+          f"{len(failures)} over threshold")
     if failures:
         for f in failures:
             print(f"FAIL {f}", file=sys.stderr)

@@ -30,7 +30,7 @@ def main() -> None:
 
     from . import (bench_blocksweep, bench_core_overhead, bench_fusion,
                    bench_graph, bench_hotpath, bench_memhier, bench_opcount,
-                   bench_prefix, bench_sort, bench_stream)
+                   bench_prefix, bench_sched, bench_sort, bench_stream)
     suites = {
         "fig3_blocksweep": bench_blocksweep.main,
         "fig4_stream": bench_stream.main,
@@ -42,6 +42,7 @@ def main() -> None:
         "sec31_memhier": bench_memhier.main,
         "sec6_graph_compiler": bench_graph.main,
         "sec12_hotpath": bench_hotpath.main,
+        "sec13_sched": bench_sched.main,
     }
     if args.only and not any(args.only in name for name in suites):
         print(f"--only {args.only!r} matches no suite; have "

@@ -1,6 +1,10 @@
 """Serve a small model with batched requests: prefill + decode loop.
 
     PYTHONPATH=src python examples/serve_decode.py --arch hymba-1.5b
+
+With ``--sched`` the decode steps run through the repro.sched predictive
+scheduling runtime (deadline accounting against --slo-ms, EWMA-corrected
+step predictions, optional replayable --sched-trace JSONL).
 """
 import argparse
 import sys
@@ -13,7 +17,17 @@ if __name__ == "__main__":
     p.add_argument("--arch", default="hymba-1.5b")
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--gen", type=int, default=32)
+    p.add_argument("--sched", action="store_true")
+    p.add_argument("--sched-policy", default="edf")
+    p.add_argument("--sched-trace", default=None)
+    p.add_argument("--slo-ms", type=float, default=50.0)
     args = p.parse_args()
-    serve.main(["--arch", args.arch, "--reduced",
-                "--batch", str(args.batch), "--prompt-len", "64",
-                "--gen", str(args.gen), "--temperature", "0.8"])
+    argv = ["--arch", args.arch, "--reduced",
+            "--batch", str(args.batch), "--prompt-len", "64",
+            "--gen", str(args.gen), "--temperature", "0.8"]
+    if args.sched:
+        argv += ["--sched", "--sched-policy", args.sched_policy,
+                 "--slo-ms", str(args.slo_ms)]
+        if args.sched_trace:
+            argv += ["--sched-trace", args.sched_trace]
+    serve.main(argv)

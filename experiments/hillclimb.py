@@ -28,6 +28,17 @@ beam plans by predicted time and modeled HBM bytes:
         [preset] [pipeline ...]
 
 Results appended to experiments/perf/graph_<preset>.md.
+
+Sched mode — scheduling-policy autotune: run a synthetic multi-tenant
+workload (staggered arrivals, per-tenant weights, tight deadlines)
+through the repro.sched runtime on the virtual clock and hill-climb
+(policy cycle, lane count ×2/÷2) to minimise (missed deadlines,
+makespan):
+
+    PYTHONPATH=src python experiments/hillclimb.py sched \
+        [preset] [chainA+chainB ...]
+
+Results appended to experiments/perf/sched_<preset>.md.
 """
 import json
 import sys
@@ -175,17 +186,105 @@ def graph_main(argv):
     print(hdr + "\n".join(rows))
 
 
+def sched_main(argv):
+    """Hill-climb scheduling policy + lane count on a synthetic workload."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import isa
+    import repro.kernels  # noqa: F401 — registers the ISA
+    from repro.memhier import PRESETS
+    from repro.sched import CostModel, POLICIES, RequestQueue, Scheduler
+
+    preset, chains = "tpu_v5e", list(argv)
+    if chains and chains[0] in PRESETS:
+        preset = chains.pop(0)
+    chains = chains or ["c0_scale+c0_add", "c0_copy", "c0_triad"]
+    for spec in chains:
+        unknown = [n for n in spec.split("+") if n not in isa.registry]
+        if unknown:
+            raise SystemExit(f"unknown instruction(s) {unknown} in chain "
+                             f"{spec!r}; presets are {sorted(PRESETS)}")
+    hier, n_elems = PRESETS[preset], 1 << 18
+    rng = np.random.default_rng(0)
+    vec = jnp.asarray(rng.standard_normal(n_elems), jnp.float32)
+
+    cost = CostModel(hierarchy=hier)
+    targets = [isa.fuse(*spec.split("+")) for spec in chains]
+    base = max(cost.estimate(t, n_elems=n_elems, dtype=jnp.float32).seconds
+               for t in targets)
+
+    def ops_for(t):
+        """Per-stage operand order: each stage's scalars, then its
+        non-chained vectors (the fused P'-type convention)."""
+        ops = []
+        for st, ne in zip(t.program.stages, t.program._n_ext):
+            ops += [2.0] * st.n_scalar_in + [vec] * ne
+        return tuple(ops)
+
+    def workload():
+        """12 staggered requests, tenants A (weight 2) / B (1), tight
+        deadlines — rebuilt per evaluation so runs stay independent."""
+        q = RequestQueue()
+        for i in range(12):
+            t = targets[i % len(targets)]
+            q.submit(t, ops_for(t), arrival=i * base / 2,
+                     deadline=i * base / 2 + 3 * base,
+                     tenant="A" if i % 3 else "B",
+                     weight=2.0 if i % 3 else 1.0)
+        return q
+
+    def evaluate(policy, lanes):
+        rep = Scheduler(workload(), cost=CostModel(hierarchy=hier),
+                        policy=policy, n_lanes=lanes,
+                        clock="virtual").drain()
+        return len(rep.missed), rep.makespan
+
+    os.makedirs("experiments/perf", exist_ok=True)
+    path = f"experiments/perf/sched_{preset}.md"
+    rows = []
+    policy, lanes = "fifo", 1
+    missed, mk = evaluate(policy, lanes)
+    rows.append(f"| start | {policy} | {lanes} | {missed} | {mk*1e6:.2f} |")
+    improved = True
+    while improved:
+        improved = False
+        moves = [(p, lanes) for p in POLICIES if p != policy]
+        moves += [(policy, lanes * 2)] + ([(policy, lanes // 2)]
+                                          if lanes > 1 else [])
+        for p, ln in moves:
+            if ln > 8:
+                continue
+            m, t = evaluate(p, ln)
+            if (m, t) < (missed, mk * (1 - 1e-9)):
+                policy, lanes, missed, mk = p, ln, m, t
+                rows.append(f"| accepted | {policy} | {lanes} | {missed} | "
+                            f"{mk*1e6:.2f} |")
+                improved = True
+                break
+    rows.append(f"| done | {policy} | {lanes} | {missed} | {mk*1e6:.2f} |")
+    hdr = ("| move | policy | lanes | missed | makespan us |\n"
+           "|---|---|---:|---:|---:|\n")
+    with open(path, "a") as f:
+        f.write(hdr + "\n".join(rows) + "\n")
+    print(hdr + "\n".join(rows))
+
+
 def main():
     if len(sys.argv) < 2:
         raise SystemExit(
             "usage: hillclimb.py <arch> <shape> [tag=k:v,... ...]\n"
             "       hillclimb.py memhier [preset] [chainA+chainB ...]\n"
-            "       hillclimb.py graph [preset] [pipeline ...]")
+            "       hillclimb.py graph [preset] [pipeline ...]\n"
+            "       hillclimb.py sched [preset] [chainA+chainB ...]")
     if sys.argv[1] == "memhier":
         memhier_main(sys.argv[2:])
         return
     if sys.argv[1] == "graph":
         graph_main(sys.argv[2:])
+        return
+    if sys.argv[1] == "sched":
+        sched_main(sys.argv[2:])
         return
     if len(sys.argv) < 3:
         raise SystemExit("usage: hillclimb.py <arch> <shape> [tag=k:v,... ...]")

@@ -43,6 +43,16 @@ import jax
 
 from .stream import StreamConfig
 
+def resolve_auto(mode: str) -> str:
+    """The single owner of the 'auto' dispatch rule: kernel iff running
+    on TPU, oracle everywhere else. Every dispatch path — instruction
+    registry, fused programs, plan parts, the scheduling runtime's batch
+    lanes — resolves through here so they cannot disagree."""
+    if mode == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+    return mode
+
+
 # Dispatch interception (LIFO). A hook is called as
 # ``hook(registry, name, operands, kwargs)`` before normal dispatch and
 # returns ``NotImplemented`` to decline; anything else short-circuits the
@@ -206,8 +216,7 @@ class FusedProgram:
         mode = mode or self.registry.mode
         if mode not in Registry.MODES:
             raise ValueError(f"mode must be one of {Registry.MODES}")
-        if mode == "auto":
-            mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+        mode = resolve_auto(mode)
         if mode == "ref":
             # ref composes oracles on the original shapes; reject exactly
             # the operand lists the kernel path (validated inside
@@ -348,10 +357,10 @@ class Registry:
             self._tls.mode = prev
 
     def _resolve(self, instr: Instruction, mode: Optional[str]) -> str:
-        mode = mode or self.mode
-        if mode == "auto":
-            on_tpu = jax.default_backend() == "tpu"
-            mode = "kernel" if (on_tpu and instr.kernel is not None) else "ref"
+        requested = mode or self.mode
+        mode = resolve_auto(requested)
+        if requested == "auto" and mode == "kernel" and instr.kernel is None:
+            mode = "ref"                 # auto never forces a missing kernel
         if mode in ("kernel", "interpret") and instr.kernel is None:
             raise ValueError(f"{instr.name}: no Pallas kernel bound "
                              f"(ref-only instruction)")

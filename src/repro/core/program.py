@@ -42,13 +42,23 @@ fingerprint)`` table without re-entering negotiation at all, and the
 built ``pallas_call`` is wrapped in ``jax.jit`` and cached per operand
 signature so a warm call never re-traces. :data:`DISPATCH_STATS` counts
 hits/misses/traces; ``benchmarks/bench_hotpath.py`` gates zero
-renegotiation and zero re-trace on the warm path.
+renegotiation and zero re-trace on the warm path. Warm buckets are
+*cost-aware*: a warm hit at a size whose modeled time has drifted > 10%
+from the bucket's negotiated geometry triggers a re-negotiation and
+updates the bucket (``DISPATCH_STATS.rebucketed``).
+
+Serving entry points (DESIGN.md §13): :meth:`Program.call_batch`
+coalesces N same-structure requests into ONE launch sharing one warm
+dispatch (the :mod:`repro.sched` queue's batch path), and observed-time
+hooks (:func:`push_observed_time_hook`) report measured wall seconds per
+call back to online cost models.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import math
+import time
 import weakref
 from typing import Any, Optional, Sequence
 
@@ -82,9 +92,63 @@ class DispatchStats:
     geometry_misses: int = 0     # negotiations that ran the candidate loop
     call_builds: int = 0         # pallas_call callables constructed
     kernel_traces: int = 0       # times a fused kernel body was traced
+    rebucketed: int = 0          # warm buckets re-negotiated on cost drift
+    batch_calls: int = 0         # coalesced call_batch launches
+    batch_items: int = 0         # work items those coalesced launches served
 
 
 DISPATCH_STATS = DispatchStats()
+
+# Observed-time hooks (DESIGN.md §13): callables
+#   hook(program, n_elems, dtype_name, seconds, n_items)
+# invoked after a __call__ / call_batch whose outputs were blocked on, so
+# ``seconds`` is honest wall time including execution, not just async
+# dispatch. With no hook registered the dispatch path pays one falsy
+# check. ``n_items`` > 1 marks a coalesced batch (``n_elems`` stays the
+# per-item size so online models key consistently with solo calls).
+_OBSERVED_HOOKS: list = []
+
+
+def push_observed_time_hook(hook) -> None:
+    _OBSERVED_HOOKS.append(hook)
+
+
+def pop_observed_time_hook(hook) -> None:
+    _OBSERVED_HOOKS.remove(hook)
+
+
+# Cost-aware warm bucketing: re-negotiate a warm bucket when the cached
+# geometry's modeled time at the actual n_elems drifts more than this
+# fraction from the best geometry for that size (DESIGN.md §12/§13).
+REBUCKET_DRIFT = 0.10
+# Per-bucket bound on remembered already-checked sizes (a sweep touching
+# many sizes in one bucket must not grow the entry monotonically).
+_CHECKED_MAX = 64
+
+
+class _WarmEntry:
+    """One warm-dispatch bucket: geometry + the drift anchor.
+
+    ``anchor_n``/``anchor_t`` are the size and modeled time the geometry
+    was (re-)negotiated at; ``checked`` remembers sizes already found
+    within the drift band so repeat calls skip the check entirely.
+    """
+
+    __slots__ = ("block_rows", "block_cols", "anchor_n", "anchor_t",
+                 "checked")
+
+    def __init__(self, block_rows: int, block_cols: int,
+                 anchor_n: int, anchor_t: float):
+        self.block_rows = block_rows
+        self.block_cols = block_cols
+        self.anchor_n = anchor_n
+        self.anchor_t = anchor_t
+        self.checked: dict = {}
+
+    def mark_checked(self, n: int) -> None:
+        if len(self.checked) >= _CHECKED_MAX:
+            self.checked.pop(next(iter(self.checked)))
+        self.checked[n] = True
 
 # (program identity, n_elems, dtype, model fp, budget, n_buffers)
 #   -> (block_rows, block_cols, StreamConfig) | ("no-fit", message)
@@ -342,6 +406,37 @@ class Program:
         dict lookup instead of a simulated candidate sweep. Model edits
         change the fingerprint and miss correctly.
         """
+        return self._negotiate_scored(n_elems, dtype)[:3]
+
+    def negotiated_time(self, n_elems: int, dtype) -> float:
+        """Modeled seconds of one launch at the negotiated geometry —
+        the scheduling runtime's model seed (:mod:`repro.sched.cost`).
+        Shares the negotiation memo, so a warm call is one dict hit."""
+        return self._negotiate_scored(n_elems, dtype)[3]
+
+    def _score_geometry(self, n_elems: int, dtype, block_rows: int,
+                        block_cols: int) -> float:
+        """Modeled seconds of ONE candidate geometry at ``n_elems`` —
+        the negotiation's per-candidate scoring term, exposed so the
+        cost-aware warm-bucket check can price a cached geometry at a
+        new size without re-running the whole candidate sweep."""
+        bits = _bits(dtype)
+        if not isinstance(self.model, BurstModel):
+            # deferred: memhier imports core.stream / core.template
+            from repro.memhier.predict import predict_program
+            return predict_program(self.model, self, n_elems, dtype,
+                                   block_rows=block_rows,
+                                   block_cols=block_cols,
+                                   n_buffers=self.n_buffers).time_s
+        block_elems = block_rows * block_cols
+        n_io = self.n_ext_vec_in + self.n_vec_out
+        padded = round_up(max(n_elems, 1), block_elems)
+        return n_io * self.model.time_for(padded * bits / 8,
+                                          block_elems * bits / 8)
+
+    def _negotiate_scored(self, n_elems: int, dtype):
+        """The negotiation loop; returns (block_rows, block_cols,
+        StreamConfig, modeled seconds of the winner)."""
         key = (self._identity, int(n_elems), _dtype_name(dtype),
                self._current_model_fp(), self.vmem_budget,
                self.n_buffers)
@@ -361,12 +456,6 @@ class Program:
         n_resident = (self.n_ext_vec_in + self.n_vec_out
                       + self.n_intermediates
                       + sum(1 for st in self.stages if st.carry_cols))
-        n_io = self.n_ext_vec_in + self.n_vec_out
-
-        use_hierarchy = not isinstance(self.model, BurstModel)
-        if use_hierarchy:
-            # deferred: memhier imports core.stream / core.template
-            from repro.memhier.predict import predict_program
 
         candidates = sorted(set(_BLOCK_COL_CANDIDATES)
                             | {st.block_cols for st in self.stages})
@@ -380,15 +469,7 @@ class Program:
                 cfg.check_vmem_budget(n_resident, budget=self.vmem_budget)
             except ValueError:
                 continue
-            if use_hierarchy:
-                t = predict_program(self.model, self, n_elems, dtype,
-                                    block_rows=block_rows,
-                                    block_cols=bc,
-                                    n_buffers=self.n_buffers).time_s
-            else:
-                padded = round_up(max(n_elems, 1), block_elems)
-                t = n_io * self.model.time_for(padded * bits / 8,
-                                               block_elems * bits / 8)
+            t = self._score_geometry(n_elems, dtype, block_rows, bc)
             if best is None or t < best[0]:
                 best = (t, bc, cfg)
         if best is None:
@@ -397,8 +478,8 @@ class Program:
                    f"VMEM budget")
             _cache_geometry(key, ("no-fit", msg))
             raise ValueError(msg)
-        _, bc, cfg = best
-        result = (block_rows, bc, cfg)
+        t, bc, cfg = best
+        result = (block_rows, bc, cfg, t)
         _cache_geometry(key, result)
         return result
 
@@ -574,6 +655,62 @@ class Program:
         return self._check_vectors(self.split_operands(operands))
 
     # ------------------------------------------------------------------
+    def _resolve_geometry(self, n: int, dtype) -> tuple[int, int]:
+        """Warm-dispatch geometry for ``n`` elements: the per-instance
+        bucket table, with the cost-aware drift check (DESIGN.md §12).
+
+        A repeat size is a pure dict hit. A NEW size landing in a warm
+        bucket first prices the cached geometry at that size (one model
+        evaluation, no candidate sweep); only when its per-element
+        modeled time drifted > :data:`REBUCKET_DRIFT` beyond the
+        negotiation anchor does the full (memoised) negotiation re-run —
+        and if the best geometry beats the cached one by more than the
+        drift band, the bucket is updated (``DISPATCH_STATS.rebucketed``).
+        So sweeps stay warm while the bucket approximation stays bounded.
+        """
+        dkey = (_n_bucket(n), _dtype_name(dtype),
+                self._current_model_fp(), self.vmem_budget,
+                self.n_buffers)
+        entry = self._dispatch_cache.get(dkey)
+        if entry is None:
+            br, bc, _, t = self._negotiate_scored(n, dtype)
+            if len(self._dispatch_cache) >= _DISPATCH_CACHE_MAX:
+                self._dispatch_cache.pop(next(iter(self._dispatch_cache)))
+            entry = _WarmEntry(br, bc, n, t)
+            self._dispatch_cache[dkey] = entry
+        elif n != entry.anchor_n and n not in entry.checked:
+            self._maybe_rebucket(entry, n, dtype)
+        return entry.block_rows, entry.block_cols
+
+    def _maybe_rebucket(self, entry: _WarmEntry, n: int, dtype) -> None:
+        t_cached = self._score_geometry(n, dtype, entry.block_rows,
+                                        entry.block_cols)
+        band = 1.0 + REBUCKET_DRIFT
+        allowed = band * entry.anchor_t * (n / entry.anchor_n)
+        if t_cached <= allowed:
+            entry.mark_checked(n)
+            return
+        # per-element efficiency drifted: run the (memoised) full sweep
+        # and keep whichever geometry actually wins at this size.
+        br, bc, _, t_best = self._negotiate_scored(n, dtype)
+        if t_cached > band * t_best:
+            entry.block_rows, entry.block_cols = br, bc
+            entry.anchor_n, entry.anchor_t = n, t_best
+            entry.checked.clear()
+            DISPATCH_STATS.rebucketed += 1
+        else:
+            # the drift is inherent to the size (every geometry pays it);
+            # re-anchor so nearby sizes compare against this one.
+            entry.anchor_n, entry.anchor_t = n, t_cached
+            entry.mark_checked(n)
+
+    def _notify_observed(self, outs, n: int, dtype, t0: float,
+                         n_items: int) -> None:
+        jax.block_until_ready(outs)
+        dt = time.perf_counter() - t0
+        for hook in list(_OBSERVED_HOOKS):
+            hook(self, n, _dtype_name(dtype), dt, n_items)
+
     def __call__(self, *operands, interpret: bool = False):
         """The shared streaming entry path: normalise arbitrary-shaped
         vector operands to padded 2D blocks, negotiate the fused geometry,
@@ -581,25 +718,19 @@ class Program:
 
         Warm calls hit the per-instance dispatch table — keyed on the
         power-of-two ``n_elems`` bucket, dtype and model fingerprint —
-        and skip negotiation entirely; the jitted ``pallas_call`` is
-        reused per operand signature, so a repeat call does zero Python
-        negotiation and zero kernel re-tracing (DESIGN.md §12).
+        and skip negotiation entirely (with the cost-aware drift check of
+        :meth:`_resolve_geometry` bounding the bucket approximation); the
+        jitted ``pallas_call`` is reused per operand signature, so a
+        repeat call does zero Python negotiation and zero kernel
+        re-tracing (DESIGN.md §12).
         """
+        t0 = time.perf_counter() if _OBSERVED_HOOKS else None
         per_stage = self.split_operands(operands)
         flat_vecs = self._check_vectors(per_stage)
         ref_v = flat_vecs[0]
         n = ref_v.size
 
-        dkey = (_n_bucket(n), _dtype_name(ref_v.dtype),
-                self._current_model_fp(), self.vmem_budget,
-                self.n_buffers)
-        geom = self._dispatch_cache.get(dkey)
-        if geom is None:
-            geom = self.negotiate_geometry(n, ref_v.dtype)[:2]
-            if len(self._dispatch_cache) >= _DISPATCH_CACHE_MAX:
-                self._dispatch_cache.pop(next(iter(self._dispatch_cache)))
-            self._dispatch_cache[dkey] = geom
-        block_rows, block_cols = geom
+        block_rows, block_cols = self._resolve_geometry(n, ref_v.dtype)
         norm = []
         for sc, ext in per_stage:
             norm.extend(sc)
@@ -609,4 +740,103 @@ class Program:
                                block_cols=block_cols, interpret=interpret)
         outs = out if isinstance(out, (tuple, list)) else (out,)
         outs = tuple(o.reshape(-1)[:n].reshape(ref_v.shape) for o in outs)
-        return outs[0] if len(outs) == 1 else outs
+        result = outs[0] if len(outs) == 1 else outs
+        if t0 is not None:
+            self._notify_observed(result, n, ref_v.dtype, t0, 1)
+        return result
+
+    # ------------------------------------------------------------------
+    def call_batch(self, batch: Sequence[Sequence[Any]], *,
+                   interpret: bool = False):
+        """Coalesced dispatch: N same-structure requests, ONE launch.
+
+        ``batch`` is a sequence of operand tuples that must agree on
+        scalar operand *values* and on vector shapes/dtype (the
+        :func:`repro.sched.queue.coalesce_key` grouping invariant), and
+        every stage must be shape-preserving. Each item is normalised to
+        whole blocks exactly as a solo :meth:`__call__` would be, the
+        padded 2-D operands are stacked along the *parallel* row axis,
+        and one ``pallas_call`` covers them all — so per-item results are
+        bit-identical to N individual calls (blocks never straddle an
+        item boundary; carried state is per row-block in both paths)
+        while the per-launch Python/dispatch overhead is paid once.
+        Returns the per-item results in order.
+        """
+        batch = [tuple(ops) for ops in batch]
+        if not batch:
+            return []
+        if not all(st.shape_preserving for st in self.stages):
+            raise ValueError(
+                f"{self.name}: shape-changing programs cannot be "
+                f"batch-coalesced (per-item output shapes differ)")
+        if len(batch) == 1:
+            return [self(*batch[0], interpret=interpret)]
+        t0 = time.perf_counter() if _OBSERVED_HOOKS else None
+
+        items = [self.split_operands(ops) for ops in batch]
+        ref_vecs = [self._check_vectors(per) for per in items]
+        shape = jnp.shape(ref_vecs[0][0])
+        dtype = jnp.result_type(ref_vecs[0][0])
+        scalars0 = [np.asarray(s) for sc, _ in items[0] for s in sc]
+        for k, per in enumerate(items[1:], start=1):
+            if jnp.shape(ref_vecs[k][0]) != shape:
+                raise ValueError(
+                    f"{self.name}: batched items must agree on vector "
+                    f"shape; item {k} has {jnp.shape(ref_vecs[k][0])} "
+                    f"vs {shape}")
+            if jnp.result_type(ref_vecs[k][0]) != dtype:
+                raise ValueError(
+                    f"{self.name}: batched items must share a dtype")
+            sc_k = [np.asarray(s) for sc, _ in per for s in sc]
+            if any(not np.array_equal(a, b)
+                   for a, b in zip(scalars0, sc_k)):
+                raise ValueError(
+                    f"{self.name}: batched items must share scalar "
+                    f"operand values (item {k} differs)")
+
+        n = ref_vecs[0][0].size
+        block_rows, block_cols = self._resolve_geometry(n, dtype)
+        # Per-item normalised rows (identical across items — same shape):
+        # cols padded up to whole blocks exactly as flatten_to_blocks.
+        rows_raw = -(-n // block_cols)
+        rows_per_item = round_up(rows_raw, block_rows)
+        padded_n = rows_per_item * block_cols
+
+        def stack_slot(vs):
+            """Stack one operand slot's per-item vectors into the padded
+            2-D batch layout — the same bytes a vstack of per-item
+            ``flatten_to_blocks`` results would hold, in O(1) jax ops
+            per slot instead of O(items)."""
+            flat = jnp.stack(vs).reshape(len(vs), n)
+            if padded_n != n:
+                flat = jnp.pad(flat, ((0, 0), (0, padded_n - n)))
+            return flat.reshape(len(vs) * rows_per_item, block_cols)
+
+        # rebuild program operand order: per stage, scalars then stacked
+        # external vectors (scalars come from item 0 — validated equal).
+        norm = []
+        slot = 0
+        per_slot = [[per[si][1][vi] for per in items]
+                    for si, (_, ext0) in enumerate(items[0])
+                    for vi in range(len(ext0))]
+        for sc, ext in items[0]:
+            norm.extend(sc)
+            for _ in ext:
+                norm.append(stack_slot(per_slot[slot]))
+                slot += 1
+        out = self.call_blocks(*norm, block_rows=block_rows,
+                               block_cols=block_cols, interpret=interpret)
+        outs = out if isinstance(out, (tuple, list)) else (out,)
+        # un-stack in O(1) jax ops per output, then view out the items
+        k_items = len(batch)
+        unstacked = [o.reshape(k_items, padded_n)[:, :n].reshape(
+                         (k_items,) + tuple(shape)) for o in outs]
+        results = []
+        for k in range(k_items):
+            per_out = tuple(o[k] for o in unstacked)
+            results.append(per_out[0] if len(per_out) == 1 else per_out)
+        DISPATCH_STATS.batch_calls += 1
+        DISPATCH_STATS.batch_items += len(batch)
+        if t0 is not None:
+            self._notify_observed(results, n, dtype, t0, len(batch))
+        return results

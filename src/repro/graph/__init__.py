@@ -10,11 +10,12 @@ with inter-program buffer reuse and a ``ref``-mode oracle
 (:mod:`~repro.graph.plan`). See DESIGN.md §11.
 """
 from .ir import Graph, Node, Scalar, Value, chain_graph
-from .partition import fuse_chain, part_cost, partition, plan_from_chains
-from .plan import Part, Plan, build_plan
+from .partition import (fuse_chain, part_cost, part_prediction, partition,
+                        plan_from_chains)
+from .plan import Part, PartUnit, Plan, build_plan
 
 __all__ = [
-    "Graph", "Node", "Part", "Plan", "Scalar", "Value", "build_plan",
-    "chain_graph", "fuse_chain", "part_cost", "partition",
-    "plan_from_chains",
+    "Graph", "Node", "Part", "PartUnit", "Plan", "Scalar", "Value",
+    "build_plan", "chain_graph", "fuse_chain", "part_cost",
+    "part_prediction", "partition", "plan_from_chains",
 ]

@@ -224,22 +224,30 @@ def _is_hierarchy(model) -> bool:
     return not isinstance(model, BurstModel)
 
 
+def part_prediction(part: Part, n_elems: int, dtype, hier):
+    """Full memhier :class:`~repro.memhier.predict.Prediction` for one
+    part (program trace with fused intermediates elided; non-template
+    singletons priced as a plain ``n_in``-read / ``n_out``-write
+    stream). The scheduling runtime reads its DRAM busy time off this
+    for the bandwidth-sharing contention term (DESIGN.md §13)."""
+    from repro.memhier.predict import predict_program, stream_bandwidth
+    if part.program is not None:
+        return predict_program(hier, part.program, n_elems, dtype)
+    spec = part.spec
+    return stream_bandwidth(hier, n_elems * _bits(dtype) // 8,
+                            n_read=spec.vector_in,
+                            n_write=spec.vector_out)
+
+
 def part_cost(part: Part, n_elems: int, dtype, hier=None) -> float:
     """Cost of one part under the chosen model (lower is better).
 
     With a Hierarchy: memhier-predicted seconds of the part's trace
-    (fused intermediates elided; non-template singletons priced as a
-    plain ``n_in``-read / ``n_out``-write stream). Without: the analytic
-    HBM byte count — the ``hbm_bytes_fused`` fallback.
+    (see :func:`part_prediction`). Without: the analytic HBM byte count
+    — the ``hbm_bytes_fused`` fallback.
     """
     if hier is not None:
-        from repro.memhier.predict import predict_program, stream_bandwidth
-        if part.program is not None:
-            return predict_program(hier, part.program, n_elems, dtype).time_s
-        spec = part.spec
-        return stream_bandwidth(hier, n_elems * _bits(dtype) // 8,
-                                n_read=spec.vector_in,
-                                n_write=spec.vector_out).time_s
+        return part_prediction(part, n_elems, dtype, hier).time_s
     return float(part.hbm_bytes(n_elems, dtype))
 
 

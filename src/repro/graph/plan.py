@@ -27,6 +27,14 @@ false serialisation from the linear part order), and
 — the software form of the paper's multiple reconfigurable regions
 running concurrently — rather than the serial sum (still available via
 ``overlap=False``).
+
+Parts are also *schedulable units* (DESIGN.md §13): :meth:`Plan.units`
+exposes each part with its dependency edges and per-part byte/time/DRAM
+estimates, and :meth:`Plan.dispatch_part` runs one part against a value
+environment — what the :mod:`repro.sched` runtime packs onto execution
+lanes (with :func:`repro.memhier.predict.contended_makespan` pricing
+HBM-bandwidth sharing between concurrently scheduled parts, instead of
+the free overlap ``predicted_time`` assumes).
 """
 from __future__ import annotations
 
@@ -86,6 +94,25 @@ class Part:
         if self.program is not None:
             return self.program.pipeline_depth()
         return self.instrs[0].pipeline_depth
+
+
+@dataclasses.dataclass(frozen=True)
+class PartUnit:
+    """One schedulable unit of a Plan: a part, its dependency edges and
+    its per-part cost estimates — what :mod:`repro.sched` packs onto
+    execution lanes (DESIGN.md §13).
+
+    ``deps`` are indices into ``plan.parts`` (identical to
+    :meth:`Plan.part_deps`); ``predicted_s``/``dram_busy_s`` are ``None``
+    when no Hierarchy was available to simulate the part."""
+
+    index: int
+    name: str
+    node_ids: tuple[int, ...]
+    deps: frozenset
+    hbm_bytes: int
+    predicted_s: Optional[float] = None
+    dram_busy_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -164,6 +191,33 @@ class Plan:
             finish.append(start + c)
         return max(finish, default=0.0)
 
+    def units(self, hierarchy=None, n_elems: Optional[int] = None,
+              dtype=None) -> tuple[PartUnit, ...]:
+        """The parts as schedulable units with per-part estimates.
+
+        With a Hierarchy (argument, or the one the plan was built with)
+        each unit carries the memhier-predicted solo seconds and the
+        full-workload DRAM busy seconds — the inputs to the scheduler's
+        bandwidth-sharing contention term. Without one, only the
+        analytic byte counts are filled in.
+        """
+        from .partition import part_prediction
+        hier = hierarchy if hierarchy is not None else self.hierarchy
+        n = n_elems if n_elems is not None else self.n_elems
+        dt = dtype if dtype is not None else self.dtype
+        deps = self.part_deps()
+        units = []
+        for i, p in enumerate(self.parts):
+            pred_s = busy_s = None
+            if hier is not None:
+                pred = part_prediction(p, n, dt, hier)
+                pred_s, busy_s = pred.time_s, pred.dram_busy_s
+            units.append(PartUnit(index=i, name=p.name,
+                                  node_ids=p.node_ids, deps=deps[i],
+                                  hbm_bytes=p.hbm_bytes(n, dt),
+                                  predicted_s=pred_s, dram_busy_s=busy_s))
+        return tuple(units)
+
     def describe(self) -> str:
         lines = [f"Plan({self.graph.name}, method={self.method}): "
                  f"{len(self.parts)} parts / {len(self.graph.nodes)} nodes, "
@@ -198,6 +252,46 @@ class Plan:
         outs = tuple(vals[v] for v in self.graph.outputs)
         return outs[0] if len(outs) == 1 else outs
 
+    # public aliases for external runtimes (repro.sched drives parts
+    # through these instead of Plan.__call__'s private loop):
+    def bind_operands(self, operands):
+        """Operand list → (vector env, scalar env) for part dispatch."""
+        return self._bind(operands)
+
+    def outputs_from(self, vals):
+        """Graph outputs out of a value environment (post-execution)."""
+        return self._outputs(vals)
+
+    def dispatch_part(self, idx: int, vals, scal,
+                      mode: Optional[str] = None):
+        """Run ONE part against a value environment — the schedulable
+        unit (DESIGN.md §13). Returns the part's raw output (tuple for
+        multi-output parts); the caller binds it via
+        :meth:`bind_part_outputs` once the whole level has been issued.
+        """
+        from repro.core.isa import resolve_auto
+        reg = self.graph.registry
+        mode = resolve_auto(mode or reg.mode)
+        part = self.parts[idx]
+        if part.program is not None:
+            ops: list[Any] = []
+            for i, node in enumerate(part.nodes):
+                k = part.nodes[i - 1].n_vec_out if i else 0
+                ops.extend(scal[s] for s in node.scalar_in)
+                ops.extend(vals[v] for v in node.vec_in[k:])
+            return part.program(*ops, interpret=(mode == "interpret"))
+        node = part.nodes[0]
+        ops = [vals[o] if isinstance(o, Value) else scal[o]
+               for o in node.operands]
+        return reg.dispatch(node.name, *ops, mode=mode)
+
+    def bind_part_outputs(self, idx: int, out, vals) -> None:
+        """Bind one part's outputs into the value environment."""
+        part = self.parts[idx]
+        outs = out if isinstance(out, tuple) else (out,)
+        for i, r in enumerate(outs):
+            vals[Value(self.graph.gid, part.last.nid, i)] = r
+
     def ref(self, *operands):
         """The end-to-end oracle: run the DAG node-by-node through the
         registered ``ref`` implementations, ignoring the partitioning."""
@@ -217,8 +311,8 @@ class Plan:
         mode = mode or reg.mode
         if mode not in reg.MODES:
             raise ValueError(f"mode must be one of {reg.MODES}")
-        if mode == "auto":
-            mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+        from repro.core.isa import resolve_auto
+        mode = resolve_auto(mode)
         if mode == "ref":
             return self.ref(*operands)
         env, scal = self._bind(operands)
@@ -231,26 +325,12 @@ class Plan:
         # hardware) is free to overlap them. Outputs bind only after the
         # whole level has been issued, making the independence structural.
         for li, level in enumerate(levels):
-            issued: list[tuple[Part, Any]] = []
+            issued: list[tuple[int, Any]] = []
             for idx in level:
-                part = self.parts[idx]
-                if part.program is not None:
-                    ops: list[Any] = []
-                    for i, node in enumerate(part.nodes):
-                        k = part.nodes[i - 1].n_vec_out if i else 0
-                        ops.extend(scal[s] for s in node.scalar_in)
-                        ops.extend(vals[v] for v in node.vec_in[k:])
-                    out = part.program(*ops, interpret=(mode == "interpret"))
-                else:
-                    node = part.nodes[0]
-                    ops = [vals[o] if isinstance(o, Value) else scal[o]
-                           for o in node.operands]
-                    out = reg.dispatch(node.name, *ops, mode=mode)
-                issued.append((part, out))
-            for part, out in issued:
-                outs = out if isinstance(out, tuple) else (out,)
-                for i, r in enumerate(outs):
-                    vals[Value(self.graph.gid, part.last.nid, i)] = r
+                issued.append((idx, self.dispatch_part(idx, vals, scal,
+                                                       mode=mode)))
+            for idx, out in issued:
+                self.bind_part_outputs(idx, out, vals)
             # buffer reuse: drop values whose last consuming level has
             # run so their storage is reclaimable (mirrors the slot
             # assignment's intent under the overlapped schedule).

@@ -2,6 +2,16 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
         --reduced --batch 4 --prompt-len 64 --gen 32
+
+With ``--sched`` the decode steps are driven through the
+:mod:`repro.sched` predictive scheduling runtime (DESIGN.md §13): each
+step is submitted to the request queue with a per-token latency deadline
+(``--slo-ms``), executed by the cost-driven scheduler on the wall clock,
+and its observed time fed back to the EWMA cost model — so later steps
+are predicted from the machine's actual behaviour, deadline misses are
+reported, and ``--sched-trace`` records the whole run as a replayable
+JSONL trace (``python -m repro.sched.replay`` it offline to compare
+policies on the production arrival sequence).
 """
 from __future__ import annotations
 
@@ -38,6 +48,15 @@ def main(argv=None):
     p.add_argument("--model-parallel", type=int, default=1)
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--sched", action="store_true",
+                   help="drive decode steps through the repro.sched "
+                        "runtime (queue + cost model + scheduler)")
+    p.add_argument("--sched-policy", default="edf",
+                   help="scheduling policy with --sched (edf|wfq|fifo)")
+    p.add_argument("--sched-trace", default=None, metavar="PATH",
+                   help="record the scheduling run as replayable JSONL")
+    p.add_argument("--slo-ms", type=float, default=50.0,
+                   help="per-token latency deadline with --sched")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -74,20 +93,80 @@ def main(argv=None):
         out_tokens = []
         tok = sample(logits, rng, args.temperature)
         out_tokens.append(np.asarray(tok))
-        t0 = time.time()
-        for i in range(args.gen - 1):
-            pos = jnp.int32(args.prompt_len + i)
-            logits, cache = decode(params, cache, tok, pos)
-            rng = jax.random.fold_in(rng, i)
-            tok = sample(logits, rng, args.temperature)
-            out_tokens.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        dt = time.time() - t0
-        gen = np.concatenate(out_tokens, axis=1)
+        if args.sched:
+            gen, dt = _decode_scheduled(args, decode, sample, params, cache,
+                                        tok, rng, out_tokens)
+        else:
+            t0 = time.time()
+            for i in range(args.gen - 1):
+                pos = jnp.int32(args.prompt_len + i)
+                logits, cache = decode(params, cache, tok, pos)
+                rng = jax.random.fold_in(rng, i)
+                tok = sample(logits, rng, args.temperature)
+                out_tokens.append(np.asarray(tok))
+            jax.block_until_ready(tok)
+            dt = time.time() - t0
+            gen = np.concatenate(out_tokens, axis=1)
         print(f"decoded {args.gen} tokens × batch {args.batch} in "
               f"{dt*1e3:.1f} ms ({args.batch*(args.gen-1)/max(dt,1e-9):.0f} tok/s)")
         print("sample row:", gen[0][:16], "...")
         return gen
+
+
+def _decode_scheduled(args, decode, sample_fn, params, cache, tok, rng,
+                      out_tokens):
+    """The decode loop as scheduling-runtime clients (DESIGN.md §13).
+
+    Decode steps are sequentially dependent (KV cache, sampled token),
+    so each is submitted as it becomes ready and drained immediately —
+    what the runtime adds is admission, deadline accounting against the
+    ``--slo-ms`` per-token budget, EWMA-corrected per-step predictions,
+    and the replayable trace.
+    """
+    from repro.sched import CostModel, RequestQueue, Scheduler, TraceRecorder
+
+    queue = RequestQueue()
+    cost = CostModel()
+    recorder = TraceRecorder() if args.sched_trace else None
+    sched = Scheduler(queue, cost=cost, policy=args.sched_policy,
+                      n_lanes=1, clock="wall", recorder=recorder)
+
+    state = {"cache": cache, "tok": tok, "rng": rng}
+
+    def step(i):
+        pos = jnp.int32(args.prompt_len + i)
+        logits, state["cache"] = decode(params, state["cache"],
+                                        state["tok"], pos)
+        state["rng"] = jax.random.fold_in(state["rng"], i)
+        state["tok"] = sample_fn(logits, state["rng"], args.temperature)
+        return state["tok"]
+
+    t0 = time.time()
+    slo = args.slo_ms * 1e-3
+    for i in range(args.gen - 1):
+        now = sched.now()
+        queue.submit(step, (i,), deadline=now + slo, tenant="decode",
+                     arrival=now, cost_key=("decode_step", args.arch))
+        sched.drain()
+        out_tokens.append(np.asarray(state["tok"]))
+    dt = time.time() - t0
+
+    rep = sched.report()
+    if rep.placements:
+        obs = sorted(p.observed_s for p in rep.placements)
+        tail = rep.placements[len(rep.placements) // 2:]
+        err = sorted(abs(p.predicted_s - p.observed_s)
+                     / max(p.observed_s, 1e-9) for p in tail)
+        print(f"sched[{args.sched_policy}]: {len(rep.placements)} steps, "
+              f"{len(rep.missed)} past the {args.slo_ms:.0f} ms SLO, "
+              f"median step {obs[len(obs)//2]*1e3:.1f} ms, "
+              f"EWMA prediction error (2nd half) "
+              f"{err[len(err)//2]*100:.0f}%")
+    if recorder is not None:
+        recorder.dump(args.sched_trace)
+        print(f"sched trace ({len(recorder.events)} events) -> "
+              f"{args.sched_trace}")
+    return np.concatenate(out_tokens, axis=1), dt
 
 
 def sample(logits, rng, temperature):

@@ -15,15 +15,16 @@ from .fastsim import simulate_fast
 from .hierarchy import (CacheLevel, Hierarchy, LastLevelCache, PAPER_ULTRA96,
                         PRESETS, TPU_V5E)
 from .predict import (DramStats, LevelStats, Prediction, best_geometry,
-                      predict_program, simulate, stream_bandwidth,
-                      sweep_llc_blocks)
+                      contended_makespan, predict_program, simulate,
+                      stream_bandwidth, sweep_llc_blocks)
 from .trace import (Access, demand_bytes, stream_trace, trace_config,
                     trace_program, trace_program_unfused, trace_stage)
 
 __all__ = [
     "Access", "CacheLevel", "DramStats", "Hierarchy", "LastLevelCache",
     "LevelStats", "PAPER_ULTRA96", "PRESETS", "Prediction", "TPU_V5E",
-    "best_geometry", "demand_bytes", "predict_program", "simulate",
+    "best_geometry", "contended_makespan", "demand_bytes",
+    "predict_program", "simulate",
     "simulate_fast", "stream_bandwidth", "stream_trace", "sweep_llc_blocks",
     "trace_config", "trace_program", "trace_program_unfused", "trace_stage",
 ]

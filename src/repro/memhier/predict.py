@@ -117,6 +117,19 @@ class Prediction:
     def effective_bw(self) -> float:
         return self.demand_bytes / self.time_s if self.time_s > 0 else 0.0
 
+    @property
+    def dram_busy_s(self) -> float:
+        """Full-workload DRAM busy seconds. ``time_s``/``demand_bytes``
+        are already extrapolated by ``scale`` for capped simulations; the
+        per-level/DRAM stats describe the simulated window only, so the
+        contention math scales the DRAM term here."""
+        return self.scale * self.dram.busy_s
+
+    @property
+    def dram_bytes(self) -> int:
+        """Full-workload DRAM traffic bytes (window stats × ``scale``)."""
+        return int(round(self.scale * self.dram.bytes))
+
     def level(self, name: str) -> LevelStats:
         for st in self.levels:
             if st.name == name:
@@ -430,6 +443,39 @@ def predict_program(hier: Hierarchy, program, n_elems: int, dtype,
         pred.demand_bytes = int(pred.demand_bytes * scale)
         pred.scale = scale
     return pred
+
+
+def contended_makespan(predictions: Sequence[Prediction]) -> float:
+    """Bandwidth-sharing contention query: predicted makespan of
+    concurrently issued workloads that share ONE DRAM/HBM interface.
+
+    Each prediction's non-DRAM work (cache-port traffic, compute overlap)
+    proceeds on its own lane, but every DRAM burst crosses the single
+    burst interface, so the DRAM busy times *serialise* while everything
+    else overlaps:
+
+        makespan = max( max_i time_i,  Σ_i dram_busy_i )
+
+    Properties (the ``bench_sched`` contention gates):
+      * never below the slowest individual workload (overlap cannot make
+        one stream faster);
+      * never above the serial sum (``dram_busy_i ≤ time_i`` under the
+        pipelined timing term, and a serial schedule trivially achieves
+        the sum) — so "overlap is free" is replaced by a makespan that
+        inflates exactly when the summed HBM demand saturates the
+        interface.
+
+    This closes the ROADMAP item that :meth:`repro.graph.plan.Plan.
+    predicted_time`'s critical-path makespan priced overlapping parts as
+    if HBM ports were infinite; :mod:`repro.sched.cost` applies it to
+    every concurrently scheduled lane set.
+    """
+    preds = list(predictions)
+    if not preds:
+        return 0.0
+    solo = max(p.time_s for p in preds)
+    shared_dram = sum(p.dram_busy_s for p in preds)
+    return max(solo, shared_dram)
 
 
 def best_geometry(hier: Hierarchy, program, n_elems: int, dtype):

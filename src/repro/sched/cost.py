@@ -1,0 +1,255 @@
+"""Online cost model: model-seeded, EWMA-corrected, contention-aware.
+
+Three layers (DESIGN.md §13):
+
+  * **Seed** — a request's first estimate comes from the repo's memory
+    model: :func:`repro.memhier.predict.predict_program` at the
+    program's negotiated geometry (full Prediction: solo seconds + DRAM
+    busy time + DRAM bytes), :meth:`repro.graph.plan.Plan.predicted_time`
+    plus per-part DRAM terms from :meth:`Plan.units` for plans, the
+    burst-law ``Program.negotiated_time`` when only a BurstModel is
+    bound, and a flat default for opaque callables.
+  * **EWMA correction** — observed wall seconds (fed by the scheduler,
+    or by the observed-time hooks of :mod:`repro.core.program` via
+    :meth:`CostModel.attach`) maintain an exponentially weighted
+    observed/modeled ratio per ``(program fingerprint, size bucket,
+    dtype)``; predictions are the seed times the learned ratio, so the
+    model tracks the machine it actually runs on without re-fitting the
+    simulator.
+  * **Contention** — :meth:`CostModel.contended_makespan` prices a set
+    of *concurrently scheduled* work: per
+    :func:`repro.memhier.predict.contended_makespan`, non-DRAM work
+    overlaps freely but the summed (correction-scaled) DRAM busy times
+    serialise on the shared interface — closing the ROADMAP item that
+    plan overlap treated HBM ports as free.
+"""
+from __future__ import annotations
+
+import contextlib
+import copy
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.burst_model import BurstModel
+from repro.core.program import (Program, _model_fingerprint, _n_bucket,
+                                pop_observed_time_hook,
+                                push_observed_time_hook)
+from repro.graph.plan import Plan
+
+from .queue import WorkItem, program_of
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimate:
+    """One work item's cost estimate.
+
+    ``seconds`` is the EWMA-corrected prediction the scheduler plans
+    with; ``modeled_s`` the raw model seed; ``dram_busy_s``/``dram_bytes``
+    the shared-interface demand feeding the contention term (already
+    scaled by the same correction as ``seconds``).
+    """
+
+    seconds: float
+    modeled_s: float
+    dram_busy_s: float
+    dram_bytes: int
+    source: str                      # memhier | plan | burst | default
+
+    @property
+    def correction(self) -> float:
+        return self.seconds / self.modeled_s if self.modeled_s > 0 else 1.0
+
+
+class CostModel:
+    """Predict-then-correct cost model over the repo's memory models."""
+
+    def __init__(self, hierarchy=None, alpha: float = 0.25,
+                 default_s: float = 1e-3):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.hierarchy = hierarchy
+        self.alpha = alpha
+        self.default_s = default_s
+        self._ratio: dict = {}        # EWMA of observed/modeled per key
+        self._abs: dict = {}          # EWMA of observed seconds (callables)
+        self._count: dict = {}        # observations folded in per key
+        self._seed_cache: dict = {}
+
+    # -- keys -----------------------------------------------------------------
+    def ewma_key(self, target, n_elems: Optional[int], dtype,
+                 cost_key: Optional[tuple] = None) -> tuple:
+        """(program fingerprint, size bucket, dtype) — the correction's
+        granularity. Explicit ``cost_key`` wins (opaque callables)."""
+        if cost_key is not None:
+            return ("user",) + tuple(cost_key)
+        prog = program_of(target)
+        bucket = _n_bucket(n_elems) if n_elems else 0
+        dt = np.dtype(dtype).name if dtype is not None else "none"
+        if prog is not None:
+            return ("prog", prog._identity, bucket, dt)
+        if isinstance(target, Plan):
+            return ("plan", target.graph.name,
+                    tuple(target.chains()), bucket, dt)
+        return ("fn", getattr(target, "__qualname__",
+                              type(target).__name__))
+
+    # -- seeding --------------------------------------------------------------
+    def _resolve_hier(self, prog: Optional[Program], plan: Optional[Plan]):
+        if self.hierarchy is not None:
+            return self.hierarchy
+        if prog is not None and not isinstance(prog.model, BurstModel):
+            return prog.model
+        if plan is not None:
+            return plan.hierarchy
+        return None
+
+    def _seed_program(self, prog: Program, n: int, dtype):
+        hier = self._resolve_hier(prog, None)
+        if hier is None:
+            t = prog.negotiated_time(n, dtype)
+            return (t, t, prog.hbm_bytes_fused(n, dtype), "burst")
+        from repro.memhier.predict import predict_program
+        if prog.model is hier:
+            negotiator = prog
+        else:                          # rescore under this model's geometry
+            negotiator = copy.copy(prog)
+            negotiator.model = hier
+            negotiator._model_fp = None
+        br, bc, _ = negotiator.negotiate_geometry(n, dtype)
+        pred = predict_program(hier, prog, n, dtype, block_rows=br,
+                               block_cols=bc, n_buffers=prog.n_buffers)
+        return (pred.time_s, pred.dram_busy_s, pred.dram_bytes, "memhier")
+
+    def _seed_plan(self, plan: Plan, n: Optional[int], dtype):
+        hier = self._resolve_hier(None, plan)
+        if hier is None:
+            return (self.default_s, 0.0, plan.modeled_hbm_bytes(n, dtype),
+                    "default")
+        t = plan.predicted_time(hier, n_elems=n, dtype=dtype)
+        units = plan.units(hier, n_elems=n, dtype=dtype)
+        busy = sum(u.dram_busy_s for u in units)
+        return (t, busy, plan.modeled_hbm_bytes(n, dtype), "plan")
+
+    def _model_key(self, prog: Optional[Program], plan: Optional[Plan]):
+        """Model-side component of the seed-cache key: the resolved
+        hierarchy's fingerprint plus the program knobs that change its
+        prediction — so rebinding ``prog.model``/``self.hierarchy`` or
+        two structurally equal Programs with different ``n_buffers``
+        never share a stale seed."""
+        hier = self._resolve_hier(prog, plan)
+        hfp = _model_fingerprint(hier) if hier is not None else None
+        if prog is not None:
+            return (hfp, prog._current_model_fp(), prog.n_buffers,
+                    prog.vmem_budget)
+        return (hfp,)
+
+    def seed(self, target, n_elems: Optional[int] = None, dtype=None):
+        """(modeled seconds, DRAM busy s, DRAM bytes, source) — memoised."""
+        prog = program_of(target)
+        plan = target if isinstance(target, Plan) else None
+        key = (self.ewma_key(target, n_elems, dtype) + (int(n_elems or 0),)
+               + self._model_key(prog, plan))
+        hit = self._seed_cache.get(key)
+        if hit is not None:
+            return hit
+        if prog is not None:
+            if n_elems is None or dtype is None:
+                raise ValueError("program estimates need n_elems and dtype")
+            res = self._seed_program(prog, n_elems, dtype)
+        elif plan is not None:
+            res = self._seed_plan(plan, n_elems, dtype)
+        else:
+            res = (self.default_s, 0.0, 0, "default")
+        self._seed_cache[key] = res
+        return res
+
+    # -- prediction -----------------------------------------------------------
+    def estimate(self, target, operands=(), *, n_elems: Optional[int] = None,
+                 dtype=None, cost_key: Optional[tuple] = None) -> Estimate:
+        prog = program_of(target)
+        if prog is not None and (n_elems is None or dtype is None):
+            vecs = prog.check_vector_operands(operands)
+            n_elems = vecs[0].size
+            dtype = vecs[0].dtype
+        if isinstance(target, Plan):
+            n_elems = n_elems if n_elems is not None else target.n_elems
+            dtype = dtype if dtype is not None else target.dtype
+        modeled, busy, nbytes, source = self.seed(target, n_elems, dtype)
+        key = self.ewma_key(target, n_elems, dtype, cost_key)
+        if source == "default" and key in self._abs:
+            # opaque targets: prediction IS the observed EWMA.
+            obs = self._abs[key]
+            return Estimate(seconds=obs, modeled_s=modeled,
+                            dram_busy_s=busy, dram_bytes=nbytes,
+                            source="ewma")
+        ratio = self._ratio.get(key, 1.0)
+        return Estimate(seconds=modeled * ratio, modeled_s=modeled,
+                        dram_busy_s=busy * ratio, dram_bytes=nbytes,
+                        source=source)
+
+    def estimate_item(self, item: WorkItem) -> Estimate:
+        """Estimate for an admitted work item (overridden by replay)."""
+        return self.estimate(item.target, item.operands,
+                             cost_key=item.cost_key)
+
+    # -- correction -----------------------------------------------------------
+    def observe(self, target, *, n_elems: Optional[int] = None, dtype=None,
+                seconds: float, n_items: int = 1,
+                cost_key: Optional[tuple] = None) -> None:
+        """Fold one observed wall time into the EWMA correction.
+
+        ``seconds`` is the whole dispatch (a coalesced batch reports the
+        batch total with ``n_items`` > 1; the per-item share seeds the
+        ratio so batched and solo observations share one key).
+
+        The first observation of a key seeds the correction outright and
+        the second REPLACES it (a key's first call typically pays
+        one-off jit tracing/compilation — cold-start time must not poison
+        the steady-state estimate); from the third on, samples blend in
+        with weight ``alpha``.
+        """
+        if seconds < 0:
+            raise ValueError(f"observed seconds must be >= 0, got {seconds}")
+        per_item = seconds / max(1, n_items)
+        key = self.ewma_key(target, n_elems, dtype, cost_key)
+        n_seen = self._count.get(key, 0)
+        self._count[key] = n_seen + 1
+        modeled, _, _, source = self.seed(target, n_elems, dtype)
+        if source == "default":
+            prev = self._abs.get(key)
+            self._abs[key] = (per_item if n_seen <= 1 or prev is None else
+                              (1 - self.alpha) * prev + self.alpha * per_item)
+            return
+        sample = per_item / modeled if modeled > 0 else 1.0
+        prev = self._ratio.get(key)
+        self._ratio[key] = (sample if n_seen <= 1 or prev is None else
+                            (1 - self.alpha) * prev + self.alpha * sample)
+
+    @contextlib.contextmanager
+    def attach(self):
+        """Feed the EWMA from :mod:`repro.core.program`'s observed-time
+        hooks: every ``Program.__call__``/``call_batch`` anywhere in the
+        process reports its measured wall seconds while attached."""
+        def hook(program, n_elems, dtype_name, seconds, n_items):
+            self.observe(program, n_elems=n_elems, dtype=dtype_name,
+                         seconds=seconds, n_items=n_items)
+        push_observed_time_hook(hook)
+        try:
+            yield self
+        finally:
+            pop_observed_time_hook(hook)
+
+    # -- contention -----------------------------------------------------------
+    def contended_makespan(self, estimates: Sequence[Estimate]) -> float:
+        """Predicted makespan of concurrently scheduled estimates:
+        correction-scaled form of
+        :func:`repro.memhier.predict.contended_makespan` — overlapping
+        work is free except the DRAM busy times, which serialise."""
+        ests = list(estimates)
+        if not ests:
+            return 0.0
+        solo = max(e.seconds for e in ests)
+        shared = sum(e.dram_busy_s for e in ests)
+        return max(solo, shared)

@@ -1,0 +1,152 @@
+"""Deterministic trace recording + offline replay of scheduling runs.
+
+A :class:`TraceRecorder` attached to a :class:`~repro.sched.scheduler.
+Scheduler` logs one JSON object per line (JSONL, sorted keys — so a
+trace is byte-stable and diffs cleanly):
+
+  * ``config`` — policy name, lane count, clock;
+  * ``submit`` — per item: seq, arrival, deadline, tenant, weight,
+    coalesce key (stringified), and the cost model's estimate at
+    admission (predicted / modeled / DRAM busy seconds, DRAM bytes);
+  * ``place``  — per item: lane, round, start/finish, predicted vs
+    observed seconds, coalescing flag.
+
+:func:`replay` re-runs the *scheduler* (not the kernels) on a recorded
+trace: the submit events reconstruct the arrival sequence, a
+:class:`ReplayCost` pins every item's estimate to the recorded values,
+and the virtual clock executes the same policy — so the produced
+placements must be identical to the recorded ones (the ``bench_sched``
+determinism gate). That makes scheduling policies benchmarkable offline
+from production traces, the same way :mod:`repro.memhier` makes memory
+geometries benchmarkable from access traces (DESIGN.md §13).
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional, Sequence
+
+from .cost import CostModel, Estimate
+from .queue import RequestQueue, WorkItem
+from .scheduler import Placement, Report, Scheduler
+
+
+class TraceRecorder:
+    """Append-only event log with byte-stable JSONL serialisation."""
+
+    def __init__(self):
+        self.events: list[dict] = []
+
+    def record(self, kind: str, **data) -> None:
+        self.events.append({"event": kind, **data})
+
+    # -- serialisation --------------------------------------------------------
+    def dumps(self) -> str:
+        return "".join(json.dumps(e, sort_keys=True) + "\n"
+                       for e in self.events)
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.dumps())
+
+    @classmethod
+    def loads(cls, text: str) -> "TraceRecorder":
+        rec = cls()
+        for line in text.splitlines():
+            line = line.strip()
+            if line:
+                rec.events.append(json.loads(line))
+        return rec
+
+    @classmethod
+    def load(cls, path: str) -> "TraceRecorder":
+        with open(path) as f:
+            return cls.loads(f.read())
+
+    # -- views ----------------------------------------------------------------
+    def of_kind(self, kind: str) -> list[dict]:
+        return [e for e in self.events if e.get("event") == kind]
+
+    def placements(self) -> list[Placement]:
+        return [Placement(seq=e["seq"], lane=e["lane"], round=e["round"],
+                          start=e["start"], finish=e["finish"],
+                          predicted_s=e["predicted_s"],
+                          observed_s=e["observed_s"],
+                          coalesced=e["coalesced"],
+                          batch_seq=e["batch_seq"])
+                for e in self.of_kind("place")]
+
+
+class ReplayCost(CostModel):
+    """Cost model pinned to a trace's recorded estimates (keyed by seq)."""
+
+    def __init__(self, estimates: dict[int, Estimate]):
+        super().__init__()
+        self._by_seq = dict(estimates)
+
+    def estimate_item(self, item: WorkItem) -> Estimate:
+        return self._by_seq[item.seq]
+
+
+class _ReplayTarget:
+    """Stand-in work target; never executed under the virtual clock. The
+    recorded coalesce-key string restores batch grouping."""
+
+    def __init__(self, seq: int):
+        self.seq = seq
+
+    def __call__(self, *a, **k):      # pragma: no cover - virtual only
+        raise RuntimeError("replay targets are never executed")
+
+
+def replay(trace: TraceRecorder, policy: Optional[str] = None,
+           n_lanes: Optional[int] = None,
+           recorder: Optional[TraceRecorder] = None) -> Report:
+    """Re-run the scheduler over a recorded arrival sequence.
+
+    With no overrides, policy and lane count come from the trace's
+    ``config`` event and the run must reproduce the recorded placements
+    exactly; pass a different ``policy``/``n_lanes`` to ask "what would
+    policy X have done on this workload" offline.
+    """
+    cfgs = trace.of_kind("config")
+    cfg = cfgs[0] if cfgs else {"policy": "edf", "n_lanes": 2}
+    submits = sorted(trace.of_kind("submit"), key=lambda e: e["seq"])
+    if not submits:
+        raise ValueError("trace has no submit events to replay")
+
+    queue = RequestQueue()
+    estimates: dict[int, Estimate] = {}
+    for e in submits:
+        item = WorkItem(seq=e["seq"], target=_ReplayTarget(e["seq"]),
+                        operands=(), deadline=e.get("deadline"),
+                        arrival=e["arrival"], tenant=e.get("tenant",
+                                                           "default"),
+                        weight=e.get("weight", 1.0),
+                        key=None if e.get("key") is None
+                        else ("replay", e["key"]))
+        queue.pending.append(item)
+        estimates[item.seq] = Estimate(
+            seconds=e["predicted_s"], modeled_s=e["modeled_s"],
+            dram_busy_s=e["dram_busy_s"], dram_bytes=e["dram_bytes"],
+            source="replay")
+    # keep the queue's seq counter ahead of the replayed items
+    for _ in range(max(e["seq"] for e in submits) + 1):
+        next(queue._seq)
+
+    sched = Scheduler(queue, cost=ReplayCost(estimates),
+                      policy=policy or cfg["policy"],
+                      n_lanes=n_lanes or cfg["n_lanes"],
+                      clock="virtual", recorder=recorder)
+    return sched.drain()
+
+
+def placements_match(a: Sequence[Placement],
+                     b: Sequence[Placement]) -> bool:
+    """True iff two placement sequences are identical (the determinism
+    gate's comparison: same items, same lanes, same rounds, same
+    predicted times and virtual start/finish instants)."""
+    sa = [(p.seq, p.lane, p.round, p.start, p.finish, p.predicted_s)
+          for p in a]
+    sb = [(p.seq, p.lane, p.round, p.start, p.finish, p.predicted_s)
+          for p in b]
+    return sa == sb

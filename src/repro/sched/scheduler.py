@@ -1,0 +1,463 @@
+"""Cost-driven scheduler: policies, lanes, contention-aware execution.
+
+The runtime's core loop (DESIGN.md §13): drain arrived requests from the
+:class:`~repro.sched.queue.RequestQueue` as coalesced batches, order
+them by the active **policy** (EDF / weighted-fair / FIFO), pack the
+front of the order onto the **lanes**, execute the round, and account
+time with the :class:`~repro.sched.cost.CostModel` — predicted per item
+before the round, observed fed back after it.
+
+Lanes are the unit of concurrency:
+
+  * on a single device, lanes model async dispatch depth — a round's
+    batches are issued together (like :meth:`Plan.__call__` levels) and
+    the *virtual* clock charges the round the bandwidth-sharing
+    contended makespan instead of assuming free overlap;
+  * on a multi-device mesh, lanes map to devices: a coalescible batch is
+    dispatched through :func:`sharded_program_call` — ``shard_map`` over
+    a ``parts`` axis, each device running its share of the independent
+    requests (the ROADMAP "independent parts onto distinct cores" item).
+
+Plans schedule at *part* granularity: :meth:`Plan.schedule` levels stop
+being a private loop — each level's parts are packed onto the lanes in
+chunks and the virtual clock charges each chunk its contended makespan.
+
+Two clocks:
+
+  * ``clock="wall"`` executes for real (results bound, observed seconds
+    fed to the EWMA correction);
+  * ``clock="virtual"`` never touches operands: durations come from the
+    cost model, so policies are benchmarkable offline, deterministically
+    — the substrate :mod:`repro.sched.replay` records and replays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.isa import FusedProgram
+from repro.graph.plan import Plan
+
+from .cost import CostModel, Estimate
+from .queue import Batch, RequestQueue, WorkItem, program_of
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+class FifoPolicy:
+    """Arrival order (sequence numbers)."""
+
+    name = "fifo"
+
+    def order(self, batches: Sequence[Batch], now: float,
+              estimate) -> list[Batch]:
+        return sorted(batches, key=lambda b: b.seq)
+
+
+class EdfPolicy:
+    """Earliest deadline first; deadline-free work drains last, FIFO."""
+
+    name = "edf"
+
+    def order(self, batches: Sequence[Batch], now: float,
+              estimate) -> list[Batch]:
+        inf = float("inf")
+        return sorted(batches, key=lambda b: (
+            b.deadline if b.deadline is not None else inf, b.seq))
+
+
+class WeightedFairPolicy:
+    """Weighted fair queueing over tenants.
+
+    Each batch gets a virtual finish tag when first seen (in seq order,
+    so tagging is deterministic); rounds serve ascending tags. Coalesce
+    keys ignore tenants, so a batch may span several — each member
+    tenant is billed ITS OWN service share
+    (``F_t = max(tenant_tag_t, arrival) + service_t / weight_t``) and
+    the batch's tag is the latest member finish, so nobody rides free on
+    a shared launch. A tenant with twice the weight advances its virtual
+    time half as fast and therefore receives ~2x the service share under
+    backlog.
+    """
+
+    name = "wfq"
+
+    def __init__(self):
+        self._tenant_tag: dict[str, float] = {}
+        self._batch_tag: dict[int, float] = {}
+
+    def order(self, batches: Sequence[Batch], now: float,
+              estimate) -> list[Batch]:
+        for b in sorted(batches, key=lambda b: b.seq):
+            if b.seq in self._batch_tag:
+                continue
+            per_tenant: dict[str, tuple[float, float]] = {}
+            for it in b.items:
+                s, w = per_tenant.get(it.tenant, (0.0, 0.0))
+                per_tenant[it.tenant] = (s + estimate(it).seconds,
+                                         w + it.weight)
+            tag = 0.0
+            for tenant in sorted(per_tenant):
+                service, weight = per_tenant[tenant]
+                start = max(self._tenant_tag.get(tenant, 0.0), b.arrival)
+                f = start + service / max(weight, 1e-12)
+                self._tenant_tag[tenant] = f
+                tag = max(tag, f)
+            self._batch_tag[b.seq] = tag
+        return sorted(batches, key=lambda b: (self._batch_tag[b.seq], b.seq))
+
+
+POLICIES = {"fifo": FifoPolicy, "edf": EdfPolicy, "wfq": WeightedFairPolicy}
+
+
+# ---------------------------------------------------------------------------
+# shard_map lane mapping (multi-device meshes)
+# ---------------------------------------------------------------------------
+
+def sharded_program_call(fused, operand_tuples, mesh, axis: str = "parts",
+                         chunk_call=None):
+    """Run N independent same-structure requests across a device mesh.
+
+    The ``shard_map``-over-parts mapping (ROADMAP item): operands of the
+    N requests are stacked along a fresh leading ``parts`` axis, sharded
+    over ``mesh``'s ``axis`` devices, and each device runs its chunk of
+    requests through the program's oracle composition (plain-jax, so it
+    shard_maps on every backend; pass ``chunk_call`` to substitute e.g. a
+    kernel-path callable on TPU). N is padded up to a multiple of the
+    axis size by replicating the first request; padding results are
+    dropped. Returns the per-request results in order.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map
+
+    if not isinstance(fused, FusedProgram):
+        raise TypeError("sharded_program_call needs a FusedProgram "
+                        f"(got {type(fused).__name__})")
+    items = [tuple(ops) for ops in operand_tuples]
+    if not items:
+        return []
+    n_dev = dict(mesh.shape)[axis]
+    n_real = len(items)
+    pad = (-n_real) % n_dev
+    items = items + [items[0]] * pad
+    chunk = len(items) // n_dev
+    n_ops = fused.program.n_inputs
+    stacked = [jnp.stack([jnp.asarray(it[k]) for it in items])
+               for k in range(n_ops)]
+    run_one = chunk_call or fused._ref
+
+    def shard_fn(*ops):
+        outs = [run_one(*(o[j] for o in ops)) for j in range(chunk)]
+        if isinstance(outs[0], tuple):
+            return tuple(jnp.stack([o[i] for o in outs])
+                         for i in range(len(outs[0])))
+        return jnp.stack(outs)
+
+    f = shard_map(shard_fn, mesh, in_specs=(P(axis),) * n_ops,
+                  out_specs=P(axis))
+    out = f(*stacked)
+    if isinstance(out, tuple):
+        return [tuple(o[k] for o in out) for k in range(n_real)]
+    return [out[k] for k in range(n_real)]
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Placement:
+    """One item's scheduling decision + outcome (the replayable record)."""
+
+    seq: int
+    lane: int
+    round: int
+    start: float
+    finish: float
+    predicted_s: float
+    observed_s: float
+    coalesced: bool
+    batch_seq: int
+
+
+@dataclasses.dataclass
+class Report:
+    placements: list[Placement]
+    makespan: float
+    missed: list[int]                 # seqs that finished past deadline
+    results: dict[int, Any]
+
+    @property
+    def n_items(self) -> int:
+        return len(self.placements)
+
+
+class Scheduler:
+    """Pack ready batches onto lanes, execute, account, repeat."""
+
+    def __init__(self, queue: RequestQueue, cost: Optional[CostModel] = None,
+                 policy: str = "edf", n_lanes: int = 2, mesh=None,
+                 mesh_axis: str = "parts", mode: Optional[str] = None,
+                 clock: str = "wall", recorder=None):
+        if clock not in ("wall", "virtual"):
+            raise ValueError(f"clock must be 'wall' or 'virtual', got "
+                             f"{clock!r}")
+        if isinstance(policy, str):
+            try:
+                self.policy = POLICIES[policy]()
+            except KeyError:
+                raise ValueError(f"unknown policy {policy!r}; have "
+                                 f"{sorted(POLICIES)}") from None
+        else:
+            self.policy = policy
+        self.queue = queue
+        self.cost = cost if cost is not None else CostModel()
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.n_lanes = (dict(mesh.shape)[mesh_axis] if mesh is not None
+                        else max(1, int(n_lanes)))
+        self.mode = mode
+        self.clock = clock
+        self.recorder = recorder
+        self.placements: list[Placement] = []
+        self.results: dict[int, Any] = {}
+        self._now = 0.0
+        self._round = 0
+        self._t0 = time.perf_counter()
+        self._estimates: dict[int, Estimate] = {}
+        self._deadlines: dict[int, Optional[float]] = {}
+        self._submitted: set[int] = set()
+        self._plan_durations: dict[tuple, float] = {}
+        if recorder is not None:
+            recorder.record("config", policy=self.policy.name,
+                            n_lanes=self.n_lanes, clock=clock)
+
+    # -- clocks ---------------------------------------------------------------
+    def now(self) -> float:
+        if self.clock == "virtual":
+            return self._now
+        return time.perf_counter() - self._t0
+
+    def _estimate(self, item: WorkItem) -> Estimate:
+        est = self._estimates.get(item.seq)
+        if est is None:
+            est = self.cost.estimate_item(item)
+            if self.clock == "virtual" and isinstance(item.target, Plan):
+                # a plan's virtual duration is its levels lane-packed
+                # with contention — priced HERE so the recorded submit
+                # estimate is exactly what execution charges and
+                # replay() reproduces placements bit-for-bit.
+                d = self._plan_virtual_duration(item.target)
+                if d is not None:
+                    est = dataclasses.replace(est, seconds=d)
+            self._estimates[item.seq] = est
+        return est
+
+    def _batch_estimate(self, batch: Batch) -> Estimate:
+        """One estimate for a whole batch. A coalesced batch is ONE
+        launch over the stacked operands: modeled work and DRAM demand
+        sum (conservative — the launch actually amortises per-call
+        overhead, which the wall clock then confirms as the win)."""
+        ests = [self._estimate(it) for it in batch.items]
+        if len(ests) == 1:
+            return ests[0]
+        return Estimate(
+            seconds=sum(e.seconds for e in ests),
+            modeled_s=sum(e.modeled_s for e in ests),
+            dram_busy_s=sum(e.dram_busy_s for e in ests),
+            dram_bytes=sum(e.dram_bytes for e in ests),
+            source=ests[0].source)
+
+    # -- execution ------------------------------------------------------------
+    @staticmethod
+    def _resolve_mode(mode: Optional[str]) -> str:
+        """The registry's 'auto' rule (single owner:
+        :func:`repro.core.isa.resolve_auto`) — so every batch path
+        (coalesced, sharded, per-item) agrees with what a direct
+        FusedProgram call would have done."""
+        from repro.core.isa import resolve_auto
+        return resolve_auto(mode or "auto")
+
+    def _dispatch_batch(self, batch: Batch):
+        """Run one batch for real; returns per-item results."""
+        mode = self._resolve_mode(batch.items[0].mode or self.mode)
+        prog = program_of(batch.target)
+        if self.mesh is not None and isinstance(batch.target, FusedProgram) \
+                and batch.key is not None:
+            return sharded_program_call(
+                batch.target, [it.operands for it in batch.items],
+                self.mesh, axis=self.mesh_axis)
+        # coalescing is a kernel-path mechanism (one stacked pallas_call);
+        # ref-mode dispatch composes oracles per item instead.
+        if batch.coalesced and prog is not None and mode != "ref":
+            return prog.call_batch([it.operands for it in batch.items],
+                                   interpret=(mode == "interpret"))
+        outs = []
+        for it in batch.items:
+            if isinstance(it.target, (FusedProgram, Plan)):
+                outs.append(it.target(*it.operands, mode=mode))
+            elif program_of(it.target) is not None:
+                # a bare Program has no oracle: kernel or interpret only
+                outs.append(it.target(*it.operands,
+                                      interpret=(mode != "kernel")))
+            else:
+                outs.append(it.target(*it.operands))
+        return outs
+
+    def _plan_virtual_duration(self, plan: Plan) -> Optional[float]:
+        """Virtual seconds of one Plan item: its dependency levels packed
+        onto the lanes in chunks, each chunk charged the contended
+        makespan — the scheduler's contention-aware refinement of
+        ``Plan.predicted_time`` (which overlaps parts for free).
+        Memoised on the plan's structure + model fingerprint (the
+        per-part memhier simulations are invariant per structure, and
+        repeated submissions of one plan are the common case)."""
+        from repro.core.program import _model_fingerprint
+        hier = self.cost.hierarchy if self.cost.hierarchy is not None \
+            else plan.hierarchy
+        if hier is None:
+            return None
+        key = (plan.graph.name, tuple(plan.chains()), plan.n_elems,
+               str(plan.dtype), self.n_lanes, _model_fingerprint(hier))
+        if key in self._plan_durations:
+            return self._plan_durations[key]
+        d = self._plan_duration_uncached(plan, hier)
+        self._plan_durations[key] = d
+        return d
+
+    def _plan_duration_uncached(self, plan: Plan, hier) -> float:
+        units = plan.units(hier)
+        total = 0.0
+        for level in plan.schedule():
+            for lo in range(0, len(level), self.n_lanes):
+                chunk = level[lo:lo + self.n_lanes]
+                ests = [Estimate(seconds=units[i].predicted_s,
+                                 modeled_s=units[i].predicted_s,
+                                 dram_busy_s=units[i].dram_busy_s or 0.0,
+                                 dram_bytes=units[i].hbm_bytes,
+                                 source="plan")
+                        for i in chunk]
+                total += self.cost.contended_makespan(ests)
+        return total
+
+    def _run_round(self, round_batches: list[Batch]) -> None:
+        start = self.now()
+        ests = [self._batch_estimate(b) for b in round_batches]
+        makespan = self.cost.contended_makespan(ests)
+
+        if self.clock == "virtual":
+            observed = [makespan] * len(round_batches)
+            results = [[None] * len(b.items) for b in round_batches]
+            finishes = [start + makespan] * len(round_batches)
+        else:
+            observed, results, finishes = [], [], []
+            done = 0.0
+            for b in round_batches:
+                t0 = time.perf_counter()
+                out = self._dispatch_batch(b)
+                jax.block_until_ready(out)
+                dt = time.perf_counter() - t0
+                done += dt
+                observed.append(dt)
+                results.append(out)
+                finishes.append(start + done)
+                it0 = b.items[0]
+                self.cost.observe(it0.target, n_elems=it0.n_elems,
+                                  dtype=_item_dtype(it0), seconds=dt,
+                                  n_items=len(b.items),
+                                  cost_key=it0.cost_key)
+
+        for lane, (b, outs, obs, fin) in enumerate(
+                zip(round_batches, results, observed, finishes)):
+            for it, out in zip(b.items, outs):
+                it.result = out
+                it.predicted_s = self._estimate(it).seconds
+                # per-item share, so predicted vs observed compare like
+                # with like on coalesced batches
+                it.observed_s = obs / max(1, len(b.items))
+                it.lane, it.start, it.finish = lane, start, fin
+                self.results[it.seq] = out
+                self.placements.append(Placement(
+                    seq=it.seq, lane=lane, round=self._round, start=start,
+                    finish=fin, predicted_s=it.predicted_s,
+                    observed_s=it.observed_s, coalesced=b.coalesced,
+                    batch_seq=b.seq))
+                if self.recorder is not None:
+                    self.recorder.record(
+                        "place", seq=it.seq, lane=lane, round=self._round,
+                        start=start, finish=fin,
+                        predicted_s=it.predicted_s,
+                        observed_s=it.observed_s,
+                        coalesced=b.coalesced, batch_seq=b.seq)
+        if self.clock == "virtual":
+            self._now = start + makespan
+        self._round += 1
+
+    def _record_submits(self, batches: list[Batch]) -> None:
+        for b in batches:
+            for it in b.items:
+                self._deadlines.setdefault(it.seq, it.deadline)
+                if self.recorder is None or it.seq in self._submitted:
+                    continue
+                self._submitted.add(it.seq)
+                est = self._estimate(it)
+                self.recorder.record(
+                    "submit", seq=it.seq, arrival=it.arrival,
+                    deadline=it.deadline, tenant=it.tenant,
+                    weight=it.weight,
+                    key=None if it.key is None else repr(it.key),
+                    predicted_s=est.seconds, modeled_s=est.modeled_s,
+                    dram_busy_s=est.dram_busy_s, dram_bytes=est.dram_bytes)
+
+    def drain(self) -> Report:
+        """Schedule until the queue is empty; returns the cumulative
+        report (drain may be called repeatedly as work keeps arriving).
+
+        One *round* (≤ ``n_lanes`` batches) runs per iteration; batches
+        the round did not take re-enter the queue, so later arrivals
+        compete under the policy instead of waiting out a long backlog.
+        """
+        while self.queue:
+            now = self.now()
+            batches = self.queue.pop_ready(now)
+            if not batches:
+                nxt = self.queue.next_arrival(now)
+                if nxt is None:
+                    nxt = min(it.arrival for it in self.queue.pending)
+                if self.clock == "virtual":
+                    self._now = max(self._now, nxt)
+                else:
+                    time.sleep(max(0.0, nxt - now))
+                continue
+            self._record_submits(batches)
+            ordered = self.policy.order(batches, self.now(), self._estimate)
+            self._run_round(ordered[:self.n_lanes])
+            for b in ordered[self.n_lanes:]:
+                self.queue.pending.extend(b.items)
+        return self.report()
+
+    def report(self) -> Report:
+        missed = sorted(
+            p.seq for p in self.placements
+            if self._deadlines.get(p.seq) is not None
+            and p.finish > self._deadlines[p.seq])
+        makespan = max((p.finish for p in self.placements), default=0.0)
+        return Report(placements=list(self.placements), makespan=makespan,
+                      missed=missed, results=dict(self.results))
+
+
+def _item_dtype(item: WorkItem):
+    prog = program_of(item.target)
+    if prog is not None:
+        vecs = prog.check_vector_operands(item.operands)
+        return jnp.result_type(vecs[0])
+    if isinstance(item.target, Plan):
+        return item.target.dtype
+    return None

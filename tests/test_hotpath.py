@@ -250,6 +250,45 @@ class TestFastEngine:
     def test_empty_trace(self):
         assert simulate(TPU_V5E, ()) == simulate_fast(TPU_V5E, ())
 
+    def test_multi_period_limit_cycle_falls_back(self, monkeypatch):
+        """Non-commensurate per-stream strides (64 B vs 96 B per step,
+        lcm 192 B): the combined steady state cycles with period > 1
+        super-period across the direct-mapped sets, which the detector's
+        single-uniform-stride run model cannot express — the engine must
+        take the reference loop (never extrapolate) and stay
+        bit-identical to simulate() (ROADMAP fast-engine follow-on)."""
+        from repro.memhier import fastsim
+
+        hier = Hierarchy(
+            name="dm", dram=DRAM,
+            levels=(CacheLevel("l1", block_bytes=32,
+                               capacity_bytes=6 * 32, bandwidth=1e9,
+                               n_ways=1),))
+        trace = []
+        for step in range(400):
+            trace.append(Access(step * 64, 64, "r", "a"))
+            trace.append(Access((1 << 40) + step * 96, 96, "r", "b"))
+
+        jumps = []
+        real_delta = fastsim._apply_stats_delta
+
+        def spy(*args, **kw):
+            jumps.append(args)
+            return real_delta(*args, **kw)
+
+        monkeypatch.setattr(fastsim, "_apply_stats_delta", spy)
+        ref = simulate(hier, list(trace))
+        fast = simulate_fast(hier, list(trace))
+        assert jumps == [], "engine extrapolated a multi-period limit cycle"
+        assert ref == fast
+        # sanity: the same streams with EQUAL strides do extrapolate
+        uniform = []
+        for step in range(400):
+            uniform.append(Access(step * 64, 64, "r", "a"))
+            uniform.append(Access((1 << 40) + step * 64, 64, "r", "b"))
+        assert simulate_fast(hier, uniform) == simulate(hier, uniform)
+        assert jumps, "uniform-stride control trace should fast-path"
+
     def test_reuse_loop_trace_is_exact(self):
         # stride-0 periodicity: the same blocks touched every period.
         hier = tiny_hier(n_blocks=4)
