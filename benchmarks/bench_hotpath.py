@@ -1,6 +1,6 @@
-"""Hot-path gates: warm dispatch, fast-engine exactness + speedup, overlap.
+"""Hot-path gates: warm dispatch, fast engine, overlap, disk cold-start.
 
-Three families of gates (DESIGN.md §12):
+Four families of gates (DESIGN.md §12/§14):
 
   * **Warm dispatch** — the second ``Program.__call__`` with the same
     operand shapes must do ZERO geometry renegotiation and ZERO kernel
@@ -14,6 +14,12 @@ Three families of gates (DESIGN.md §12):
   * **Plan overlap** — on a DAG with independent branches the
     critical-path ``Plan.predicted_time`` must be strictly below the
     serial sum and never below the slowest single part.
+  * **Disk cold start** — rebuilding the full dispatch state (geometry
+    negotiations + beam-searched partition) from a populated persistent
+    plan cache (:mod:`repro.core.artifact`) must be ≥ 5× faster than
+    compiling it cold, with zero renegotiations — the §14 cold-start
+    reduction, measured in-process so the jax import doesn't dilute the
+    ratio (``bench_aot`` gates the cross-process form).
 """
 from __future__ import annotations
 
@@ -151,11 +157,58 @@ def _check_plan_overlap() -> None:
         "predicted_time fell below the critical path"
 
 
+def _check_disk_cache_coldstart() -> None:
+    """Cold-vs-warm-start from the persistent artifact cache, ≥ 5×."""
+    import tempfile
+
+    from repro.core import artifact
+
+    def build_dispatch_state():
+        """Everything a worker compiles before serving the pipeline:
+        the beam-searched partition plus each part's geometry (the
+        partition's negotiations share the work via the caches)."""
+        g = c0_pipeline_graph("axpby_residual")
+        return partition(g, model=TPU_V5E, n_elems=N, method="beam")
+
+    with tempfile.TemporaryDirectory(prefix="plan-cache-") as d, \
+            artifact.using_plan_cache(d):
+        prog_mod.clear_dispatch_caches()
+        s0 = dataclasses.replace(prog_mod.DISPATCH_STATS)
+        t0 = time.perf_counter()
+        cold_plan = build_dispatch_state()          # compiles + publishes
+        t_cold = time.perf_counter() - t0
+        s1 = dataclasses.replace(prog_mod.DISPATCH_STATS)
+
+        prog_mod.clear_dispatch_caches()            # "fresh worker"
+        t1 = time.perf_counter()
+        warm_plan = build_dispatch_state()          # loads artifacts
+        t_warm = time.perf_counter() - t1
+        s2 = prog_mod.DISPATCH_STATS
+
+    speedup = t_cold / t_warm if t_warm > 0 else float("inf")
+    cold_sweeps = s1.geometry_misses - s0.geometry_misses
+    warm_sweeps = s2.geometry_misses - s1.geometry_misses
+    warm_hits = s2.disk_hit - s1.disk_hit
+    row("hotpath_diskcache_cold_ms", t_cold * 1e3,
+        f"warm:{t_warm * 1e3:.2f}ms_speedup:{speedup:.1f}x(floor:5x)_"
+        f"disk_hits:{warm_hits}_renegotiations:{warm_sweeps}")
+    assert cold_sweeps > 0, "cold build negotiated nothing — bad workload"
+    assert warm_sweeps == 0, \
+        f"warm-from-disk build re-negotiated geometry {warm_sweeps}x"
+    assert warm_hits > 0, "warm build never read the artifact cache"
+    assert warm_plan.chains() == cold_plan.chains(), \
+        "cached plan diverged from the searched plan"
+    assert speedup >= 5.0, (
+        f"disk-cache warm start only {speedup:.1f}x over cold "
+        f"(cold {t_cold * 1e3:.1f} ms, warm {t_warm * 1e3:.1f} ms)")
+
+
 def main() -> None:
     _check_warm_dispatch()
     _check_fast_engine_exact()
     _check_fast_engine_speedup()
     _check_plan_overlap()
+    _check_disk_cache_coldstart()
 
 
 if __name__ == "__main__":

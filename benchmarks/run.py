@@ -26,11 +26,30 @@ def main() -> None:
                    help="run only suites whose name contains this substring")
     p.add_argument("--json", default=None, metavar="OUT",
                    help="write machine-readable results to this path")
+    p.add_argument("--plan-cache", default=None, metavar="DIR",
+                   help="persistent compiled-plan artifact dir (DESIGN.md "
+                        "§14); equivalent to REPRO_PLAN_CACHE in the env")
+    p.add_argument("--aot", action="store_true",
+                   help="compile-farm mode: pre-populate the plan cache "
+                        "with every bench program's negotiated geometries "
+                        "and partitioned plans, then exit — a subsequent "
+                        "run (or any worker sharing the dir) warm-starts "
+                        "with zero negotiations (benchmarks/bench_aot.py)")
     args = p.parse_args()
 
-    from . import (bench_blocksweep, bench_core_overhead, bench_fusion,
-                   bench_graph, bench_hotpath, bench_memhier, bench_opcount,
-                   bench_prefix, bench_sched, bench_sort, bench_stream)
+    if args.plan_cache:
+        from repro.core.artifact import set_plan_cache
+        set_plan_cache(args.plan_cache)
+    if args.aot:
+        from . import bench_aot
+        n = bench_aot.precompile()
+        print(f"aot: published {n} compiled-plan artifacts", file=sys.stderr)
+        return
+
+    from . import (bench_aot, bench_blocksweep, bench_core_overhead,
+                   bench_fusion, bench_graph, bench_hotpath, bench_memhier,
+                   bench_opcount, bench_prefix, bench_sched, bench_sort,
+                   bench_stream)
     suites = {
         "fig3_blocksweep": bench_blocksweep.main,
         "fig4_stream": bench_stream.main,
@@ -43,6 +62,7 @@ def main() -> None:
         "sec6_graph_compiler": bench_graph.main,
         "sec12_hotpath": bench_hotpath.main,
         "sec13_sched": bench_sched.main,
+        "sec14_aot": bench_aot.main,
     }
     if args.only and not any(args.only in name for name in suites):
         print(f"--only {args.only!r} matches no suite; have "

@@ -31,6 +31,14 @@ trivial case of the :mod:`repro.graph` dataflow compiler, which
 partitions whole instruction DAGs into fused-region programs
 (DESIGN.md §11). Graph tracing hooks into dispatch via
 :func:`push_dispatch_hook`.
+
+Compiled dispatch state persists across processes: each fused chain's
+negotiated geometry (and each partitioned plan) can be published to /
+loaded from the content-addressed artifact cache in
+:mod:`repro.core.artifact` (DESIGN.md §14), keyed on the very identity
+this module defines — the instruction names and scalar-slot layout of
+the chain — so an equivalent chain rebuilt by name in a fresh worker
+resolves to the same on-disk entry and skips the cold negotiation.
 """
 from __future__ import annotations
 

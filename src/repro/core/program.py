@@ -47,6 +47,14 @@ renegotiation and zero re-trace on the warm path. Warm buckets are
 from the bucket's negotiated geometry triggers a re-negotiation and
 updates the bucket (``DISPATCH_STATS.rebucketed``).
 
+Persistent artifacts (DESIGN.md §14): when a plan cache is active
+(:mod:`repro.core.artifact`), an in-process geometry miss first consults
+the content-addressed on-disk cache — keyed identically to the memo —
+and every completed negotiation (including "no-fit" verdicts) is
+atomically published back, so a fresh worker pointed at a populated
+cache dir re-negotiates NOTHING (``DISPATCH_STATS.disk_*`` counts the
+traffic; ``benchmarks/bench_aot.py`` gates the warm subprocess).
+
 Serving entry points (DESIGN.md §13): :meth:`Program.call_batch`
 coalesces N same-structure requests into ONE launch sharing one warm
 dispatch (the :mod:`repro.sched` queue's batch path), and observed-time
@@ -68,6 +76,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import artifact as _artifact
 from .burst_model import BurstModel, TPU_V5E_HBM
 from .stream import (LANES, VMEM_BYTES, StreamConfig, _bits,
                      flatten_to_blocks, round_up)
@@ -95,6 +104,12 @@ class DispatchStats:
     rebucketed: int = 0          # warm buckets re-negotiated on cost drift
     batch_calls: int = 0         # coalesced call_batch launches
     batch_items: int = 0         # work items those coalesced launches served
+    # persistent-artifact cache (core.artifact, DESIGN.md §14):
+    disk_hit: int = 0            # artifacts loaded + verified from disk
+    disk_miss: int = 0           # disk consults that found no entry
+    disk_invalidated: int = 0    # stale/wrong-key/version-drift entries dropped
+    disk_corrupt: int = 0        # unreadable/truncated entries dropped
+    disk_store: int = 0          # artifacts atomically published to disk
 
 
 DISPATCH_STATS = DispatchStats()
@@ -244,6 +259,46 @@ def _cache_geometry(key, value) -> None:
     _GEOMETRY_CACHE[key] = value
 
 
+# -- persistent geometry artifacts (core.artifact, DESIGN.md §14) -----------
+# Payload of one "geom" disk entry: the memo value serialised flat. The
+# StreamConfig is stored by its three defining ints (its derived
+# geometry is recomputed), "no-fit" verdicts persist too — a fresh
+# process skips the doomed candidate sweep as well as the successful
+# ones.
+
+def _geometry_payload(value) -> dict:
+    if value[0] == "no-fit":
+        return {"no_fit": str(value[1])}
+    br, bc, cfg, t = value
+    return {"block_rows": int(br), "block_cols": int(bc),
+            "vlen_bits": int(cfg.vlen_bits),
+            "block_bits": int(cfg.block_bits),
+            "n_buffers": cfg.n_buffers, "time_s": float(t)}
+
+
+def _geometry_from_payload(payload):
+    """Decode + validate one disk payload back to the memo value; None
+    marks the entry stale (counted/dropped by PlanCache.load). The
+    StreamConfig constructor re-runs its own geometry invariants, so a
+    tampered payload that would produce an illegal config dies here
+    instead of reaching a kernel launch."""
+    if not isinstance(payload, dict):
+        return None
+    if "no_fit" in payload:
+        return ("no-fit", str(payload["no_fit"]))
+    try:
+        br, bc = int(payload["block_rows"]), int(payload["block_cols"])
+        cfg = StreamConfig(vlen_bits=int(payload["vlen_bits"]),
+                           block_bits=int(payload["block_bits"]),
+                           n_buffers=payload["n_buffers"])
+        t = float(payload["time_s"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    if br < 1 or bc < 1 or bc % LANES:
+        return None
+    return (br, bc, cfg, t)
+
+
 def _stage_identity(st: Stage) -> tuple:
     return (st.name, st.n_scalar_in, st.n_vec_in, st.n_vec_out,
             st.block_rows, st.block_cols, st.carry_cols,
@@ -266,15 +321,17 @@ class Program:
             phase-structured fast engine).
     vmem_budget: VMEM capacity bound for resident operand blocks.
     n_buffers: DMA double-buffering depth: enters the VMEM footprint
-            (each resident operand block is held ``n_buffers`` times)
-            AND the hierarchy timing term (≥ 2 overlaps fill with
-            compute; 1 serialises — see :mod:`repro.memhier.predict`).
+            (each resident operand block is held ``ceil(n_buffers)``
+            times) AND the hierarchy timing term (≥ 2 overlaps fill with
+            compute; 1 serialises; fractional depths in (1, 2) model the
+            fill/drain transients in between — see
+            :mod:`repro.memhier.predict`).
     """
 
     def __init__(self, stages: Sequence[Stage], name: Optional[str] = None,
                  model=TPU_V5E_HBM,
                  vmem_budget: int = VMEM_BYTES,
-                 n_buffers: int = 2):
+                 n_buffers: float = 2):
         stages = tuple(stages)
         if not stages:
             raise ValueError("a Program needs at least one stage")
@@ -404,7 +461,10 @@ class Program:
         repeated negotiation — same Program warm, or an equivalent
         candidate chain inside the partitioner's beam search — costs one
         dict lookup instead of a simulated candidate sweep. Model edits
-        change the fingerprint and miss correctly.
+        change the fingerprint and miss correctly. With an active plan
+        cache (:mod:`repro.core.artifact`), a memo miss additionally
+        consults the same key on disk and publishes the sweep's result,
+        so negotiations persist across processes (DESIGN.md §14).
         """
         return self._negotiate_scored(n_elems, dtype)[:3]
 
@@ -437,8 +497,9 @@ class Program:
     def _negotiate_scored(self, n_elems: int, dtype):
         """The negotiation loop; returns (block_rows, block_cols,
         StreamConfig, modeled seconds of the winner)."""
+        model_fp = self._current_model_fp()
         key = (self._identity, int(n_elems), _dtype_name(dtype),
-               self._current_model_fp(), self.vmem_budget,
+               model_fp, self.vmem_budget,
                self.n_buffers)
         hit = _GEOMETRY_CACHE.get(key)
         if hit is not None:
@@ -446,6 +507,20 @@ class Program:
             if hit[0] == "no-fit":
                 raise ValueError(hit[1])
             return hit
+        # in-process miss: consult the persistent artifact cache before
+        # paying the candidate sweep (DESIGN.md §14). Token-fingerprinted
+        # models are process-local and never share disk entries.
+        disk = _artifact.plan_cache()
+        if disk is not None and not _artifact.persistable_fingerprint(model_fp):
+            disk = None
+        if disk is not None:
+            loaded = disk.load("geom", key, decode=_geometry_from_payload)
+            if loaded is not None:
+                DISPATCH_STATS.geometry_hits += 1
+                _cache_geometry(key, loaded)
+                if loaded[0] == "no-fit":
+                    raise ValueError(loaded[1])
+                return loaded
         DISPATCH_STATS.geometry_misses += 1
         block_rows = 1
         for st in self.stages:
@@ -476,11 +551,16 @@ class Program:
             msg = (f"{self.name}: no block geometry fits {n_resident} "
                    f"resident operands in the {self.vmem_budget}-byte "
                    f"VMEM budget")
-            _cache_geometry(key, ("no-fit", msg))
+            verdict = ("no-fit", msg)
+            _cache_geometry(key, verdict)
+            if disk is not None:
+                disk.store("geom", key, _geometry_payload(verdict))
             raise ValueError(msg)
         t, bc, cfg = best
         result = (block_rows, bc, cfg, t)
         _cache_geometry(key, result)
+        if disk is not None:
+            disk.store("geom", key, _geometry_payload(result))
         return result
 
     # -- kernel emission ----------------------------------------------------

@@ -55,11 +55,15 @@ class StreamConfig:
     block_bits:  HBM→VMEM DMA block ("LLC block" / burst length).
     n_buffers:   pipeline depth of the DMA double-buffering (paper §3.1.4
                  "double the interconnect rate" → overlap instead).
+                 Fractional depths in (1, 2) model partially overlapped
+                 fill/drain transients in the memhier timing term
+                 (:mod:`repro.memhier.predict`); capacity-wise a partial
+                 buffer still occupies a whole one (``ceil``).
     """
 
     vlen_bits: int = 256 * 128       # 256-bit paper VLEN × 128 lanes
     block_bits: int = 16384 * 128    # paper's 16384-bit LLC block × lanes
-    n_buffers: int = 2
+    n_buffers: float = 2
 
     def __post_init__(self):
         if self.vlen_bits % (LANES * 8) != 0:
@@ -94,8 +98,10 @@ class StreamConfig:
         ``block_bits`` already fixes the block's size in bits, so the
         footprint is dtype-independent: a dtype only changes how many
         *elements* fit in the block (``block_elems``), not its bytes.
+        A fractional overlap depth still pins whole buffers — VMEM is
+        allocated in full blocks, so capacity rounds up.
         """
-        return n_operands * self.n_buffers * self.block_bits // 8
+        return n_operands * math.ceil(self.n_buffers) * self.block_bits // 8
 
     def check_vmem_budget(self, n_operands: int,
                           budget: int = VMEM_BYTES) -> None:

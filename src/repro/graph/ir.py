@@ -249,6 +249,29 @@ class Graph:
                  if s.bound is None]
         return free
 
+    def structure_key(self) -> tuple:
+        """Value-based structural identity of the DAG — the graph-side
+        component of a persistent plan-artifact key (DESIGN.md §14).
+
+        Two graphs with equal keys have identical nodes, edges, operand
+        interleavings, bound scalar literals and outputs (names and
+        ``gid`` excluded — they carry no structure), so a chain split
+        cached for one is legal, costs the same, and schedules the same
+        for the other.
+        """
+        def enc(v: Value) -> tuple:
+            return (("in", v.index) if v.nid is None
+                    else ("n", v.nid, v.index))
+
+        nodes = tuple(
+            (nd.name,
+             tuple(enc(o) if isinstance(o, Value)
+                   else ("s", o.index, o.bound) for o in nd.operands),
+             nd.n_vec_out)
+            for nd in self.nodes)
+        return ("graph", len(self.inputs), len(self.scalars), nodes,
+                tuple(enc(v) for v in self.outputs))
+
     # -- cost bookkeeping (roofline inputs) ----------------------------------
     def flops(self, n_elems: int) -> float:
         total = 0.0

@@ -45,11 +45,14 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
+import numpy as np
+
+from repro.core import artifact as _artifact
 from repro.core.isa import fuse_chain  # noqa: F401 — re-exported API
 from repro.core.stream import VMEM_BYTES, _bits
 
 from .ir import Graph, Node
-from .plan import Part, Plan, build_plan
+from .plan import Part, Plan, build_plan, plan_metadata
 
 # ---------------------------------------------------------------------------
 # chain legality inside a graph
@@ -252,6 +255,74 @@ def part_cost(part: Part, n_elems: int, dtype, hier=None) -> float:
 
 
 # ---------------------------------------------------------------------------
+# persistent plan artifacts (core.artifact, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def _plan_disk_key(ctx: _Partitioner, method: str, beam_width: int):
+    """(cache, key) for one search invocation, or (None, None) when the
+    run cannot share disk entries: no cache configured, or the model has
+    only a process-local token fingerprint."""
+    cache = _artifact.plan_cache()
+    if cache is None:
+        return None, None
+    from repro.core.program import _model_fingerprint
+    fp = (_model_fingerprint(ctx.model)
+          if ctx.model is not None else None)
+    if not _artifact.persistable_fingerprint(fp):
+        return None, None
+    key = ("plan", ctx.graph.structure_key(), int(ctx.n_elems),
+           np.dtype(ctx.dtype).name, method,
+           int(beam_width) if method == "beam" else 0,
+           ctx.max_depth, ctx.vmem_budget, fp)
+    return cache, key
+
+
+def _plan_payload(plan: Plan) -> dict:
+    """What a "plan" disk entry stores: the chain split + the search's
+    cost (the expensive memhier scoring) and the derived schedule/slot
+    metadata (verified on load — see :func:`repro.graph.plan.
+    plan_metadata`)."""
+    return {"chains": [[int(i) for i in c] for c in plan.chains()],
+            "cost": float(plan.cost), "meta": plan_metadata(plan)}
+
+
+def _plan_from_payload(ctx: _Partitioner, payload, method: str
+                       ) -> Optional[Plan]:
+    """Rebuild a Plan from a disk payload, re-validating everything that
+    must hold for THIS graph: exact node coverage, every chain still a
+    legal fused program (``part_for`` recompiles it — a deregistered
+    instruction, shrunk budget or changed stage makes it None), and the
+    rebuilt schedule/slot metadata matching the stored block
+    bit-for-bit. Any failure returns None, which the cache layer counts
+    as ``disk_invalidated`` and deletes — the caller re-searches and
+    overwrites."""
+    if not isinstance(payload, dict):
+        return None
+    try:
+        chains = [tuple(int(i) for i in c) for c in payload["chains"]]
+        cost = float(payload["cost"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    covered = sorted(i for c in chains for i in c)
+    if covered != list(range(len(ctx.graph.nodes))):
+        return None
+    parts = []
+    for c in chains:
+        part = ctx.part_for(c)
+        if part is None:
+            return None
+        parts.append(part)
+    plan = build_plan(ctx.graph, parts, cost=cost, n_elems=ctx.n_elems,
+                      dtype=ctx.dtype, hierarchy=ctx.hier, method=method)
+    meta = payload.get("meta")
+    if (meta is not None
+            and _artifact.jsonable(plan_metadata(plan))
+            != _artifact.jsonable(meta)):
+        return None
+    return plan
+
+
+# ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
 
@@ -274,25 +345,44 @@ def partition(graph: Graph, *, model=None, n_elems: int = 1 << 18,
     n_elems / dtype: representative operand size for cost evaluation and
                 the VMEM-fit check (defaults: 2^18 elements of float32).
     max_depth:  optional ceiling on a chain's summed pipeline depth.
+
+    With an active plan cache (:mod:`repro.core.artifact`), searched
+    partitions persist: the winning chain split and its cost are stored
+    under (graph structure hash × size/dtype × search knobs × budget ×
+    model fingerprint), and a later process — or another worker in a
+    ``repro.sched`` fleet — rebuilds the Plan from the cached chains
+    (re-validated against this graph and registry) instead of re-running
+    the beam search and its memhier scoring (DESIGN.md §14). Trivial
+    ``singletons`` runs never touch the disk.
     """
     ctx = _Partitioner(graph, model=model, n_elems=n_elems, dtype=dtype,
                        max_depth=max_depth, vmem_budget=vmem_budget)
+    cache = dkey = None
     if method == "singletons":
         chains = ctx.singletons()
-    elif method == "greedy":
+    elif method in ("greedy", "beam"):
+        cache, dkey = _plan_disk_key(ctx, method, beam_width)
+        if cache is not None:
+            plan = cache.load("plan", dkey,
+                              decode=lambda p: _plan_from_payload(
+                                  ctx, p, method))
+            if plan is not None:
+                return plan
         candidates = [ctx.greedy(), ctx.singletons()]
-        chains = min(candidates, key=ctx.plan_cost)
-    elif method == "beam":
-        candidates = [ctx.beam(beam_width), ctx.greedy(), ctx.singletons()]
+        if method == "beam":
+            candidates.insert(0, ctx.beam(beam_width))
         chains = min(candidates, key=ctx.plan_cost)
     else:
         raise ValueError(f"unknown method {method!r}; "
                          f"have beam | greedy | singletons")
     parts = [ctx.part_for(tuple(c)) for c in chains]
     assert all(p is not None for p in parts)
-    return build_plan(graph, parts, cost=ctx.plan_cost(chains),
+    plan = build_plan(graph, parts, cost=ctx.plan_cost(chains),
                       n_elems=n_elems, dtype=ctx.dtype, hierarchy=ctx.hier,
                       method=method)
+    if cache is not None:
+        cache.store("plan", dkey, _plan_payload(plan))
+    return plan
 
 
 def plan_from_chains(graph: Graph, chains: Sequence[Sequence[int]], *,

@@ -440,3 +440,28 @@ def build_plan(graph: Graph, parts: Sequence[Part], *, cost: float,
                 n_slots=n_slots, n_values=n_values, cost=cost,
                 n_elems=n_elems, dtype=dtype, hierarchy=hierarchy,
                 method=method)
+
+
+def plan_metadata(plan: Plan) -> dict:
+    """JSON-able schedule/slot summary of a Plan — the *verified
+    metadata* block of a persistent plan artifact (DESIGN.md §14).
+
+    Chains, dependency levels, the buffer-slot map and the slot counts
+    are all deterministically derivable from (graph, chain split), so a
+    loaded artifact's metadata must match what rebuilding from its
+    chains produces bit-for-bit; any mismatch marks the entry stale and
+    the partitioner re-searches (``repro.graph.partition``). Values are
+    encoded positionally (``["in", index]`` for graph inputs,
+    ``["n", nid, index]`` for node outputs) so the encoding is stable
+    across processes — ``gid`` never leaves the process.
+    """
+    def enc(v: Value) -> list:
+        return (["in", v.index] if v.nid is None
+                else ["n", v.nid, v.index])
+
+    return {"chains": [[int(i) for i in c] for c in plan.chains()],
+            "levels": [[int(i) for i in lv] for lv in plan.schedule()],
+            "n_slots": int(plan.n_slots),
+            "n_values": int(plan.n_values),
+            "slots": sorted([enc(v), int(s)]
+                            for v, s in plan.slot_of.items())}

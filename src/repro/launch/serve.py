@@ -57,7 +57,17 @@ def main(argv=None):
                    help="record the scheduling run as replayable JSONL")
     p.add_argument("--slo-ms", type=float, default=50.0,
                    help="per-token latency deadline with --sched")
+    p.add_argument("--plan-cache", default=None, metavar="DIR",
+                   help="persistent compiled-plan artifact dir (DESIGN.md "
+                        "§14): negotiated geometries and partitioned plans "
+                        "are loaded from / published to DIR, so a restarted "
+                        "or replicated server skips the cold compile work; "
+                        "equivalent to REPRO_PLAN_CACHE in the environment")
     args = p.parse_args(argv)
+
+    if args.plan_cache:
+        from repro.core.artifact import set_plan_cache
+        set_plan_cache(args.plan_cache)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -229,8 +229,10 @@ def _extrapolate_run(sims, dram, top, accesses, start: int, run: _Run,
 
 
 def simulate_fast(hier: Hierarchy, trace: Iterable[Access],
-                  n_buffers: int = 2) -> Prediction:
-    """Drop-in replacement for :func:`repro.memhier.predict.simulate`.
+                  n_buffers: float = 2) -> Prediction:
+    """Drop-in replacement for :func:`repro.memhier.predict.simulate`
+    (including fractional ``n_buffers`` overlap depths — the timing
+    term is shared, so the engines cannot disagree on it).
 
     Bit-identical results on periodic (streaming) traces in a small
     fraction of the Python iterations; irregular traces fall back to the

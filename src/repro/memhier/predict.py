@@ -111,7 +111,7 @@ class Prediction:
     dram: DramStats
     bottleneck: str
     scale: float = 1.0            # >1 when a capped trace was extrapolated
-    n_buffers: int = 2            # overlap depth the timing term assumed
+    n_buffers: float = 2          # overlap depth the timing term assumed
 
     @property
     def effective_bw(self) -> float:
@@ -321,6 +321,15 @@ def _prediction(sims, dram, demand: int, n_buffers: int) -> Prediction:
         # §3.1.3/§3.1.4 + the Pallas grid pipeline: double-buffered
         # streams overlap all levels, the slowest stage sets throughput.
         time_s = max(busy.values())
+    elif n_buffers > 1:
+        # fractional overlap depth: between the serial (k=1) and fully
+        # pipelined (k=2) extremes a stream spends part of each step in
+        # fill/drain transients where stages cannot hide behind each
+        # other. Linear interpolation in the depth keeps both extremes
+        # bit-exact (k→1 is the serial sum, k→2 the pipelined max) and
+        # is monotone non-increasing in k since sum >= max.
+        k = float(n_buffers)
+        time_s = (2.0 - k) * sum(busy.values()) + (k - 1.0) * max(busy.values())
     else:
         # single-buffered: each fill serialises with compute, stages add.
         time_s = sum(busy.values())
@@ -335,14 +344,16 @@ def _prediction(sims, dram, demand: int, n_buffers: int) -> Prediction:
 
 
 def simulate(hier: Hierarchy, trace: Iterable[Access],
-             n_buffers: int = 2) -> Prediction:
+             n_buffers: float = 2) -> Prediction:
     """Run a trace through the hierarchy; returns the full breakdown.
 
     This is the reference engine: every access walks every level.
     ``n_buffers`` is the DMA double-buffering depth (see module
     docstring); the default 2 keeps the historical fully-overlapped
-    timing term. :func:`repro.memhier.fastsim.simulate_fast` is the
-    drop-in phase-structured engine the scoring hot paths use.
+    timing term, fractional depths in (1, 2) interpolate the fill/drain
+    transients between serial and fully pipelined.
+    :func:`repro.memhier.fastsim.simulate_fast` is the drop-in
+    phase-structured engine the scoring hot paths use.
     """
     if n_buffers < 1:
         raise ValueError(f"n_buffers must be >= 1, got {n_buffers}")
@@ -400,7 +411,7 @@ def predict_program(hier: Hierarchy, program, n_elems: int, dtype,
                     block_rows: Optional[int] = None,
                     block_cols: Optional[int] = None,
                     max_sim_bytes: int = MAX_SIM_BYTES,
-                    n_buffers: Optional[int] = None,
+                    n_buffers: Optional[float] = None,
                     engine=None) -> Prediction:
     """Predicted execution profile of one fused Program launch.
 

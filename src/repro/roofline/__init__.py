@@ -1,2 +1,3 @@
 from .analysis import (HW_V5E, CellReport, analyze_compiled,
-                       collective_bytes, roofline_terms)
+                       collective_bytes, dispatch_cache_report,
+                       roofline_terms)

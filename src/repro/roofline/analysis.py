@@ -226,6 +226,32 @@ def plan_report(plan, n_elems: int, dtype, hw: dict = HW_V5E,
     return rep
 
 
+def dispatch_cache_report() -> dict:
+    """``DISPATCH_STATS`` as a JSON-able dict plus derived hit rates.
+
+    The observability surface for the warm-dispatch caches (DESIGN.md
+    §12) and the persistent compiled-plan artifact cache (§14): every
+    counter of :data:`repro.core.program.DISPATCH_STATS` verbatim, plus
+
+      * ``geometry_hit_rate`` — fraction of geometry negotiations served
+        from the in-process memo OR a verified disk artifact, and
+      * ``disk_hit_rate`` — fraction of disk consults that loaded a
+        verified artifact (misses, invalidations and corrupt entries
+        all fall back to recompilation, never to an error).
+
+    Bench suites embed these in their JSON rows; callers wanting a
+    clean window should ``reset_dispatch_stats()`` first.
+    """
+    from repro.core import program as prog_mod
+    s = prog_mod.DISPATCH_STATS
+    rep = dataclasses.asdict(s)
+    n_geo = s.geometry_hits + s.geometry_misses
+    rep["geometry_hit_rate"] = s.geometry_hits / n_geo if n_geo else 0.0
+    n_disk = s.disk_hit + s.disk_miss + s.disk_invalidated + s.disk_corrupt
+    rep["disk_hit_rate"] = s.disk_hit / n_disk if n_disk else 0.0
+    return rep
+
+
 @dataclasses.dataclass
 class CellReport:
     arch: str

@@ -29,6 +29,14 @@ Two clocks:
   * ``clock="virtual"`` never touches operands: durations come from the
     cost model, so policies are benchmarkable offline, deterministically
     — the substrate :mod:`repro.sched.replay` records and replays.
+
+Cold starts (DESIGN.md §14): a worker fleet shares ONE persistent
+plan-cache directory — pass ``Scheduler(plan_cache=DIR)`` or export
+``REPRO_PLAN_CACHE`` before spawning workers — so each program's
+geometry negotiation and each graph's partition search is paid once
+across the fleet: the first worker publishes content-addressed
+artifacts (:mod:`repro.core.artifact`), every later worker warm-starts
+from them with zero candidate sweeps and zero beam searches.
 """
 from __future__ import annotations
 
@@ -205,10 +213,17 @@ class Scheduler:
     def __init__(self, queue: RequestQueue, cost: Optional[CostModel] = None,
                  policy: str = "edf", n_lanes: int = 2, mesh=None,
                  mesh_axis: str = "parts", mode: Optional[str] = None,
-                 clock: str = "wall", recorder=None):
+                 clock: str = "wall", recorder=None, plan_cache=None):
         if clock not in ("wall", "virtual"):
             raise ValueError(f"clock must be 'wall' or 'virtual', got "
                              f"{clock!r}")
+        if plan_cache is not None:
+            # fleet-shared persistent artifacts (DESIGN.md §14): point
+            # this worker process at the shared cache dir so compiled
+            # plans/geometries are published once and warm-started by
+            # every other worker (same as REPRO_PLAN_CACHE in the env).
+            from repro.core.artifact import set_plan_cache
+            set_plan_cache(plan_cache)
         if isinstance(policy, str):
             try:
                 self.policy = POLICIES[policy]()

@@ -1,0 +1,372 @@
+"""Persistent compiled-plan artifacts (ISSUE 6, DESIGN.md §14).
+
+Covers the content-addressed on-disk cache end to end: geometry and
+plan round-trips whose warm-started outputs are bit-identical to a
+fresh compile, no-fit verdicts persisting across "processes",
+fault injection (truncated / garbage / version-mismatched / wrong-key
+entries silently recompile and overwrite), model-fingerprint drift
+missing instead of serving stale geometry, token-fingerprinted models
+never touching disk, activation via ``REPRO_PLAN_CACHE`` and explicit
+override, and a REAL fresh subprocess warm-starting with zero geometry
+negotiations from a parent-populated cache dir.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401 — registers the ISA
+from repro.core import artifact, isa
+from repro.core import program as prog_mod
+from repro.core.program import Program
+from repro.graph.partition import partition
+from repro.kernels.ops import c0_pipeline_graph
+from repro.memhier import TPU_V5E
+
+F32 = jnp.float32
+
+
+@pytest.fixture
+def cache_dir(tmp_path):
+    """A fresh artifact dir active for the test, cold dispatch state."""
+    prog_mod.clear_dispatch_caches()
+    prog_mod.reset_dispatch_stats()
+    with artifact.using_plan_cache(tmp_path):
+        yield tmp_path
+    prog_mod.clear_dispatch_caches()
+
+
+def snap():
+    return dataclasses.replace(prog_mod.DISPATCH_STATS)
+
+
+def delta(s0, *names):
+    s1 = prog_mod.DISPATCH_STATS
+    return tuple(getattr(s1, n) - getattr(s0, n) for n in names)
+
+
+def two_stage_program(**kw):
+    stages = tuple(isa.get(n).template.stage()
+                   for n in ("c0_scale", "c0_add"))
+    return Program(stages, **kw)
+
+
+def entries(tmp_path, kind):
+    return sorted(p for p in tmp_path.iterdir()
+                  if p.name.startswith(f"{kind}-"))
+
+
+# ---------------------------------------------------------------------------
+# PlanCache mechanics
+# ---------------------------------------------------------------------------
+
+class TestPlanCacheUnit:
+    def test_roundtrip_and_entry_naming(self, cache_dir):
+        cache = artifact.plan_cache()
+        key = ("geom", ("id",), 4096, "float32", ("hbm", 1.0), 1 << 20, 2)
+        assert cache.store("geom", key, {"block_cols": 256})
+        path = cache.entry_path("geom", key)
+        assert os.path.basename(path) == (
+            f"geom-{artifact.key_hash(key)}.json")
+        assert os.path.exists(path)
+        s0 = snap()
+        assert cache.load("geom", key) == {"block_cols": 256}
+        assert delta(s0, "disk_hit", "disk_miss") == (1, 0)
+
+    def test_tuples_and_lists_share_identity(self):
+        key_t = ("k", (1, 2), {"a": (3,)})
+        key_l = ["k", [1, 2], {"a": [3]}]
+        assert artifact.key_hash(key_t) == artifact.key_hash(key_l)
+        assert (artifact.canonical_key(key_t)
+                == artifact.canonical_key(key_l))
+
+    def test_missing_entry_is_miss(self, cache_dir):
+        s0 = snap()
+        assert artifact.plan_cache().load("geom", ("nope",)) is None
+        assert delta(s0, "disk_miss", "disk_hit", "disk_corrupt") == (1, 0, 0)
+
+    def test_renamed_entry_never_serves_another_key(self, cache_dir):
+        # a file substituted under another key's name fails the stored-
+        # key check: invalidated + deleted, not served.
+        cache = artifact.plan_cache()
+        cache.store("geom", ("a",), {"v": 1})
+        os.replace(cache.entry_path("geom", ("a",)),
+                   cache.entry_path("geom", ("b",)))
+        s0 = snap()
+        assert cache.load("geom", ("b",)) is None
+        assert delta(s0, "disk_invalidated", "disk_hit") == (1, 0)
+        assert not os.path.exists(cache.entry_path("geom", ("b",)))
+
+    def test_unwritable_dir_degrades_to_false(self, tmp_path):
+        blocker = tmp_path / "not-a-dir"
+        blocker.write_text("file where the cache dir should be")
+        cache = artifact.PlanCache(blocker)
+        assert cache.store("geom", ("k",), {"v": 1}) is False
+        assert cache.load("geom", ("k",)) is None   # miss, no crash
+
+    def test_decode_rejection_invalidates(self, cache_dir):
+        cache = artifact.plan_cache()
+        cache.store("geom", ("k",), {"v": 1})
+        s0 = snap()
+        assert cache.load("geom", ("k",), decode=lambda p: None) is None
+        assert delta(s0, "disk_invalidated") == (1,)
+        assert not entries(cache_dir, "geom")
+
+    def test_persistable_fingerprint(self):
+        assert artifact.persistable_fingerprint(TPU_V5E.fingerprint())
+        assert not artifact.persistable_fingerprint(("token", 3))
+        assert not artifact.persistable_fingerprint(
+            ("outer", ("token", 3), "x"))
+        assert artifact.persistable_fingerprint(("hier", ("lru", 64), 1.5))
+
+
+# ---------------------------------------------------------------------------
+# geometry artifacts through Program.negotiate_geometry
+# ---------------------------------------------------------------------------
+
+class TestGeometryArtifacts:
+    def test_warm_start_bit_identical(self, cache_dir):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal(5000), F32)
+        b = jnp.asarray(rng.standard_normal(5000), F32)
+
+        fused = isa.fuse("c0_scale", "c0_add")
+        geo_cold = fused.program.negotiate_geometry(5000, F32)
+        ref_cold = np.asarray(fused(2.0, x, b, mode="ref"))
+        int_cold = np.asarray(fused(2.0, x, b, mode="interpret"))
+        assert entries(cache_dir, "geom")
+
+        prog_mod.clear_dispatch_caches()            # "fresh worker"
+        s0 = snap()
+        twin = isa.fuse("c0_scale", "c0_add")
+        assert twin is not fused
+        geo_warm = twin.program.negotiate_geometry(5000, F32)
+        assert delta(s0, "geometry_misses", "disk_hit") == (0, 1)
+        assert geo_warm == geo_cold
+        assert np.array_equal(np.asarray(twin(2.0, x, b, mode="ref")),
+                              ref_cold)
+        assert np.array_equal(np.asarray(twin(2.0, x, b, mode="interpret")),
+                              int_cold)
+
+        # ...and both match a compile with disk caching OFF entirely.
+        prog_mod.clear_dispatch_caches()
+        with artifact.using_plan_cache(None):
+            fresh = isa.fuse("c0_scale", "c0_add")
+            assert fresh.program.negotiate_geometry(5000, F32) == geo_cold
+            assert np.array_equal(
+                np.asarray(fresh(2.0, x, b, mode="interpret")), int_cold)
+
+    def test_no_fit_verdict_persists(self, cache_dir):
+        with pytest.raises(ValueError, match="VMEM budget"):
+            two_stage_program(vmem_budget=1).negotiate_geometry(4096, F32)
+        assert entries(cache_dir, "geom")
+
+        prog_mod.clear_dispatch_caches()
+        s0 = snap()
+        with pytest.raises(ValueError, match="VMEM budget"):
+            two_stage_program(vmem_budget=1).negotiate_geometry(4096, F32)
+        assert delta(s0, "geometry_misses", "disk_hit") == (0, 1)
+
+    @pytest.mark.parametrize("damage", ["truncate", "garbage", "version",
+                                        "wrong_key"])
+    def test_fault_injection_recompiles_and_overwrites(self, cache_dir,
+                                                       damage):
+        prog = two_stage_program()
+        geo = prog.negotiate_geometry(4096, F32)
+        (entry,) = entries(cache_dir, "geom")
+
+        if damage == "truncate":
+            entry.write_bytes(entry.read_bytes()[:10])
+        elif damage == "garbage":
+            entry.write_bytes(b"\x00\xffnot json at all")
+        elif damage == "version":
+            data = json.loads(entry.read_text())
+            data["version"] = artifact.ARTIFACT_VERSION + 1
+            entry.write_text(json.dumps(data))
+        else:
+            data = json.loads(entry.read_text())
+            data["key"] = ["somebody", "else"]
+            entry.write_text(json.dumps(data))
+
+        prog_mod.clear_dispatch_caches()
+        s0 = snap()
+        assert two_stage_program().negotiate_geometry(4096, F32) == geo
+        bad, = delta(s0, "disk_corrupt" if damage in ("truncate", "garbage")
+                     else "disk_invalidated")
+        assert bad == 1
+        assert delta(s0, "geometry_misses", "disk_hit") == (1, 0)
+        # the recompile overwrote the damaged entry: next worker hits.
+        prog_mod.clear_dispatch_caches()
+        s1 = snap()
+        assert two_stage_program().negotiate_geometry(4096, F32) == geo
+        assert delta(s1, "geometry_misses", "disk_hit") == (0, 1)
+
+    def test_fingerprint_drift_misses_not_serves(self, cache_dir):
+        two_stage_program(model=TPU_V5E).negotiate_geometry(1 << 16, F32)
+        prog_mod.clear_dispatch_caches()
+        s0 = snap()
+        edited = TPU_V5E.with_llc_block(TPU_V5E.llc.block_bytes * 2)
+        two_stage_program(model=edited).negotiate_geometry(1 << 16, F32)
+        assert delta(s0, "disk_hit", "geometry_misses") == (0, 1)
+        # the original model's entry is untouched and still serves.
+        prog_mod.clear_dispatch_caches()
+        s1 = snap()
+        two_stage_program(model=TPU_V5E).negotiate_geometry(1 << 16, F32)
+        assert delta(s1, "disk_hit", "geometry_misses") == (1, 0)
+
+    def test_token_fingerprint_models_never_touch_disk(self, cache_dir):
+        class Anonymous:
+            """TPU_V5E behaviourally, but with no value fingerprint —
+            dispatch falls back to a process-local token."""
+            def __init__(self, inner):
+                self._inner = inner
+
+            def __getattr__(self, name):
+                if name == "fingerprint":
+                    raise AttributeError(name)
+                return getattr(self._inner, name)
+
+        s0 = snap()
+        prog = two_stage_program(model=Anonymous(TPU_V5E))
+        geo = prog.negotiate_geometry(4096, F32)
+        assert geo[1] >= 1                      # negotiation itself works
+        assert not list(cache_dir.iterdir())    # nothing persisted
+        assert delta(s0, "disk_hit", "disk_miss", "disk_store") == (0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# whole-plan artifacts through graph.partition
+# ---------------------------------------------------------------------------
+
+class TestPlanArtifacts:
+    def test_plan_roundtrip_warm_start(self, cache_dir):
+        from repro.graph.ir import Value
+
+        rng = np.random.default_rng(0)
+        g = c0_pipeline_graph("axpby_residual")
+        n = 1 << 12
+        ops_in = [jnp.asarray(rng.standard_normal(n), F32)
+                  if isinstance(key, Value) else 2.0
+                  for _, key in g.free_inputs()]
+
+        cold = partition(g, model=TPU_V5E, n_elems=n, method="beam")
+        out_cold = np.asarray(cold(*ops_in, mode="ref"))
+        assert entries(cache_dir, "plan")
+
+        prog_mod.clear_dispatch_caches()
+        s0 = snap()
+        warm = partition(c0_pipeline_graph("axpby_residual"),
+                         model=TPU_V5E, n_elems=n, method="beam")
+        assert delta(s0, "geometry_misses") == (0,)
+        hits, = delta(s0, "disk_hit")
+        assert hits > 0
+        assert warm.chains() == cold.chains()
+        assert np.array_equal(np.asarray(warm(*ops_in, mode="ref")),
+                              out_cold)
+
+    def test_corrupt_plan_invalidated_and_overwritten(self, cache_dir):
+        g = c0_pipeline_graph("axpby_residual")
+        cold = partition(g, model=TPU_V5E, n_elems=1 << 12, method="beam")
+        (entry,) = entries(cache_dir, "plan")
+        data = json.loads(entry.read_text())
+        data["payload"]["chains"] = [[0]]       # no longer covers the DAG
+        entry.write_text(json.dumps(data))
+
+        prog_mod.clear_dispatch_caches()
+        s0 = snap()
+        redone = partition(c0_pipeline_graph("axpby_residual"),
+                           model=TPU_V5E, n_elems=1 << 12, method="beam")
+        inval, = delta(s0, "disk_invalidated")
+        assert inval >= 1
+        assert redone.chains() == cold.chains()  # re-searched, not served
+        # and the re-search republished a good entry:
+        prog_mod.clear_dispatch_caches()
+        s1 = snap()
+        again = partition(c0_pipeline_graph("axpby_residual"),
+                          model=TPU_V5E, n_elems=1 << 12, method="beam")
+        assert delta(s1, "disk_invalidated") == (0,)
+        assert again.chains() == cold.chains()
+
+    def test_singletons_method_skips_disk(self, cache_dir):
+        # the trivial no-search method has nothing worth persisting;
+        # only its geometry negotiations may touch the "geom" entries.
+        partition(c0_pipeline_graph("axpby_residual"), model=TPU_V5E,
+                  n_elems=1 << 12, method="singletons")
+        assert not entries(cache_dir, "plan")
+
+
+# ---------------------------------------------------------------------------
+# activation: env var, explicit override, scoping
+# ---------------------------------------------------------------------------
+
+class TestActivation:
+    def test_env_var_activates(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(artifact.ENV_VAR, str(tmp_path))
+        artifact.reset_plan_cache()
+        try:
+            cache = artifact.plan_cache()
+            assert cache is not None and cache.path == str(tmp_path)
+        finally:
+            artifact.reset_plan_cache()
+
+    def test_explicit_none_overrides_env(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(artifact.ENV_VAR, str(tmp_path))
+        with artifact.using_plan_cache(None):
+            assert artifact.plan_cache() is None
+        artifact.reset_plan_cache()
+
+    def test_using_plan_cache_restores(self, tmp_path):
+        before = artifact.plan_cache()
+        with artifact.using_plan_cache(tmp_path) as cache:
+            assert cache.path == str(tmp_path)
+            assert artifact.plan_cache() is cache
+        after = artifact.plan_cache()
+        assert (after is None) == (before is None)
+
+
+# ---------------------------------------------------------------------------
+# cross-process sharing: the actual §14 story
+# ---------------------------------------------------------------------------
+
+_CHILD = textwrap.dedent("""
+    import dataclasses, json
+    import jax.numpy as jnp
+    import repro.kernels
+    from repro.core import isa
+    from repro.core import program as prog_mod
+
+    fused = isa.fuse("c0_scale", "c0_add")
+    fused.program.negotiate_geometry(5000, jnp.float32)
+    s = prog_mod.DISPATCH_STATS
+    print(json.dumps({f.name: getattr(s, f.name)
+                      for f in dataclasses.fields(s)}))
+""")
+
+
+class TestCrossProcess:
+    def test_subprocess_warm_starts_from_parent_cache(self, cache_dir):
+        fused = isa.fuse("c0_scale", "c0_add")
+        fused.program.negotiate_geometry(5000, F32)
+        assert entries(cache_dir, "geom")
+
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        src = os.path.join(root, "src")
+        env = dict(os.environ)
+        env[artifact.ENV_VAR] = str(cache_dir)
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                             if env.get("PYTHONPATH") else src)
+        proc = subprocess.run([sys.executable, "-c", _CHILD],
+                              capture_output=True, text=True, env=env,
+                              timeout=300)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        stats = json.loads(proc.stdout.splitlines()[-1])
+        assert stats["geometry_misses"] == 0, stats
+        assert stats["disk_hit"] == 1, stats
+        assert stats["disk_corrupt"] == 0 and stats["disk_invalidated"] == 0

@@ -384,6 +384,43 @@ class TestNBuffers:
         cfg2 = StreamConfig(n_buffers=2)
         assert cfg2.vmem_footprint_bytes(3) == 2 * cfg1.vmem_footprint_bytes(3)
 
+    def test_fractional_depths_interpolate_monotonically(self):
+        """Fractional n_buffers ∈ (1, 2) land strictly between the
+        serialised (sum) and fully-overlapped (max) extremes, monotone
+        non-increasing in depth, with the extremes bit-exact."""
+        trace = list(stream_trace(1 << 20, PAPER_ULTRA96.llc.block_bytes,
+                                  ["a", "b"], ["o"]))
+        depths = [1, 1.25, 1.5, 1.75, 2, 3]
+        preds = [simulate(PAPER_ULTRA96, trace, n_buffers=k)
+                 for k in depths]
+        times = [p.time_s for p in preds]
+        for earlier, later in zip(times, times[1:]):
+            assert later <= earlier + 1e-18
+        busys = ([lv.busy_s for lv in preds[0].levels]
+                 + [preds[0].dram.busy_s])
+        assert times[0] == sum(busys)              # k=1 exact: serialised
+        assert times[depths.index(2)] == max(busys)   # k=2 exact: overlap
+        assert max(busys) < times[2] < sum(busys)  # k=1.5 strictly between
+        for p in preds:                            # traffic never moves
+            assert p.dram == preds[0].dram
+
+    def test_fractional_depth_fast_engine_exact(self):
+        trace = list(stream_trace(1 << 20, TPU_V5E.llc.block_bytes,
+                                  ["a"], ["o"]))
+        for k in (1.25, 1.5, 1.75):
+            assert (simulate(TPU_V5E, trace, n_buffers=k)
+                    == simulate_fast(TPU_V5E, trace, n_buffers=k))
+
+    def test_fractional_depth_footprint_rounds_up(self):
+        """VMEM capacity is allocated in whole blocks: a 1.5-deep stream
+        reserves the same two blocks per operand as a double buffer."""
+        assert (StreamConfig(n_buffers=1.5).vmem_footprint_bytes(3)
+                == StreamConfig(n_buffers=2).vmem_footprint_bytes(3))
+
+    def test_fractional_depth_below_one_rejected(self):
+        with pytest.raises(ValueError, match="n_buffers"):
+            simulate(TPU_V5E, (), n_buffers=0.5)
+
 
 # ---------------------------------------------------------------------------
 # plan overlap
