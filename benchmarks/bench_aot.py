@@ -115,7 +115,7 @@ def run_workloads() -> dict:
     x = jnp.asarray(rng.standard_normal(5000), jnp.float32)
     b = jnp.asarray(rng.standard_normal(5000), jnp.float32)
 
-    s0 = dataclasses.replace(prog_mod.DISPATCH_STATS)
+    s0 = prog_mod.DISPATCH_STATS.snapshot()
     hashes: dict[str, str] = {}
     plans = {}
     for chain in CHAINS:
@@ -131,7 +131,7 @@ def run_workloads() -> dict:
         plans[kind] = plan
         hashes[f"ref:plan:{kind}"] = _hash(
             plan(*_plan_operands(plan, (x, b)), mode="ref"))
-    s1 = prog_mod.DISPATCH_STATS
+    s1 = prog_mod.DISPATCH_STATS.snapshot()
     stats = {f.name: getattr(s1, f.name) - getattr(s0, f.name)
              for f in dataclasses.fields(s1)}
 

@@ -1,10 +1,12 @@
 """Hot-path gates: warm dispatch, fast engine, overlap, disk cold-start.
 
-Four families of gates (DESIGN.md §12/§14):
+Five families of gates (DESIGN.md §12/§14/§15):
 
   * **Warm dispatch** — the second ``Program.__call__`` with the same
     operand shapes must do ZERO geometry renegotiation and ZERO kernel
     re-tracing (read off :data:`repro.core.program.DISPATCH_STATS`).
+  * **Observability overhead** — the same warm path with the §15 span
+    tracer installed must stay within 3% of the tracer-off path.
   * **Fast engine** — :func:`repro.memhier.simulate_fast` must be
     stat-exact (every integer counter, every derived time) against the
     reference :func:`repro.memhier.simulate` on EVERY trace generator
@@ -52,7 +54,7 @@ def _check_warm_dispatch() -> None:
 
     prog_mod.clear_dispatch_caches()            # also cold-starts `fused`
     fused(2.0, x, b, mode="interpret")          # cold: negotiate + trace
-    s0 = dataclasses.replace(prog_mod.DISPATCH_STATS)
+    s0 = prog_mod.DISPATCH_STATS.snapshot()
     t0 = time.perf_counter()
     fused(2.0, x, b, mode="interpret")          # warm
     warm_s = time.perf_counter() - t0
@@ -72,12 +74,58 @@ def _check_warm_dispatch() -> None:
     # fuse cache was cleared above, so this builds a fresh FusedProgram.
     twin = isa.fuse("c0_scale", "c0_add")
     assert twin is not fused
-    g0 = dataclasses.replace(prog_mod.DISPATCH_STATS)
+    g0 = prog_mod.DISPATCH_STATS.snapshot()
     twin.program.negotiate_geometry(x.size, jnp.float32)
     g1 = prog_mod.DISPATCH_STATS
     assert g1.geometry_misses == g0.geometry_misses, \
         "equivalent Program missed the shared geometry cache"
     row("hotpath_shared_geometry_cache", 0.0, "twin_program_hit_ok")
+
+
+def _check_instrumented_overhead() -> None:
+    """§15 near-zero-overhead gate: the warm dispatch path with full
+    observability active (span tracer installed, registry-backed
+    counters — they are always on) must cost ≤ 3% over the tracer-off
+    path. Samples alternate enabled/disabled so clock drift, GC and CI
+    neighbours hit both arms equally; medians are compared."""
+    from repro.obs import trace as obs_trace
+
+    rng = np.random.default_rng(0)
+    fused = isa.fuse("c0_scale", "c0_add")
+    x = jnp.asarray(rng.standard_normal(5000), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(5000), jnp.float32)
+    fused(2.0, x, b, mode="interpret")          # warm every cache
+
+    reps, samples = 20, 13
+
+    def one_sample() -> float:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fused(2.0, x, b, mode="interpret")
+        return (time.perf_counter() - t0) / reps
+
+    tracer = obs_trace.Tracer()
+    prev = obs_trace.get_tracer()
+    on, off = [], []
+    try:
+        one_sample(); one_sample()              # discard a warmup pair
+        for _ in range(samples):
+            obs_trace.set_tracer(tracer)
+            on.append(one_sample())
+            obs_trace.set_tracer(None)
+            off.append(one_sample())
+    finally:
+        obs_trace.set_tracer(prev)
+    t_on = sorted(on)[len(on) // 2]
+    t_off = sorted(off)[len(off) // 2]
+    ratio = t_on / t_off if t_off > 0 else float("inf")
+    row("hotpath_obs_overhead_ratio", ratio,
+        f"on:{t_on * 1e6:.1f}us_off:{t_off * 1e6:.1f}us_"
+        f"spans:{len(tracer.spans)}_ceil:1.03")
+    assert ratio <= 1.03, (
+        f"instrumented warm dispatch is {ratio:.3f}x the uninstrumented "
+        f"path (on {t_on * 1e6:.1f} us, off {t_off * 1e6:.1f} us) — "
+        f"observability must stay within 3%")
 
 
 def _check_fast_engine_exact() -> None:
@@ -173,11 +221,11 @@ def _check_disk_cache_coldstart() -> None:
     with tempfile.TemporaryDirectory(prefix="plan-cache-") as d, \
             artifact.using_plan_cache(d):
         prog_mod.clear_dispatch_caches()
-        s0 = dataclasses.replace(prog_mod.DISPATCH_STATS)
+        s0 = prog_mod.DISPATCH_STATS.snapshot()
         t0 = time.perf_counter()
         cold_plan = build_dispatch_state()          # compiles + publishes
         t_cold = time.perf_counter() - t0
-        s1 = dataclasses.replace(prog_mod.DISPATCH_STATS)
+        s1 = prog_mod.DISPATCH_STATS.snapshot()
 
         prog_mod.clear_dispatch_caches()            # "fresh worker"
         t1 = time.perf_counter()
@@ -205,6 +253,7 @@ def _check_disk_cache_coldstart() -> None:
 
 def main() -> None:
     _check_warm_dispatch()
+    _check_instrumented_overhead()
     _check_fast_engine_exact()
     _check_fast_engine_speedup()
     _check_plan_overlap()

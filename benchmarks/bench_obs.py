@@ -1,0 +1,186 @@
+"""Observability gates: span trees, byte-stable exports, drift (§15).
+
+Four families of gates over :mod:`repro.obs`:
+
+  * **Span tree** — ONE request served through the wall-clock scheduler
+    yields ONE connected span tree: a single parentless ``request`` root
+    whose subtree covers admission → coalesce → placement → dispatch →
+    negotiate (→ pallas_build on the cold path), with every recorded
+    span reachable from that root and finished.
+  * **Byte-stable JSONL** — two identical cold runs under a
+    :class:`~repro.obs.trace.VirtualClock` tracer (dispatch caches
+    cleared, plan cache disabled) export byte-identical JSONL.
+  * **Chrome trace** — the wall-clock run's ``export_chrome()`` is
+    valid Chrome-trace/Perfetto JSON: a ``traceEvents`` list of
+    complete (``"X"``) events with non-negative µs timestamps.
+  * **Drift ranking** — a tracker fed a 2×-wrong cell and a 5%-wrong
+    cell ranks the 2× cell first, with sample counts carried through.
+
+The run also drops the CI build artifacts: ``OBS_trace.json`` (the
+Chrome trace), ``OBS_metrics.txt`` (Prometheus text exposition) and
+``OBS_metrics.json`` (the JSON snapshot) into ``$REPRO_OBS_DIR``
+(default: the working directory).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import artifact, isa
+from repro.core import program as prog_mod
+from repro.kernels import ops  # noqa: F401 — registers the ISA
+from repro.memhier import TPU_V5E
+from repro.obs import drift as obs_drift
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.sched import CostModel, RequestQueue, Scheduler
+
+from .common import row
+
+N = 8192
+_REQUIRED = ("request", "admission", "coalesce", "placement",
+             "dispatch", "negotiate")
+
+
+def _operands():
+    rng = np.random.default_rng(0)
+    return (2.0,
+            jnp.asarray(rng.standard_normal(N), jnp.float32),
+            jnp.asarray(rng.standard_normal(N), jnp.float32))
+
+
+def _serve_one_request() -> obs_trace.Tracer:
+    """One cold request through the wall-clock scheduler, traced."""
+    tracer = obs_trace.Tracer()
+    with artifact.using_plan_cache(None), obs_trace.using_tracer(tracer):
+        prog_mod.clear_dispatch_caches()
+        fused = isa.fuse("c0_scale", "c0_add")
+        q = RequestQueue()
+        q.submit(fused, _operands(), tenant="bench", arrival=0.0)
+        Scheduler(q, cost=CostModel(hierarchy=TPU_V5E), policy="fifo",
+                  n_lanes=1, clock="wall", mode="interpret").drain()
+    return tracer
+
+
+def _check_span_tree(tracer: obs_trace.Tracer) -> None:
+    roots = [s for s in tracer.spans if s.parent_id is None]
+    assert len(roots) == 1, (
+        f"expected exactly one parentless root span, got "
+        f"{[(s.span_id, s.name) for s in roots]}")
+    root = roots[0]
+    assert root.name == "request", f"root span is {root.name!r}"
+    names = tracer.subtree_names(root)
+    missing = [n for n in _REQUIRED if n not in names]
+    assert not missing, (
+        f"request subtree missing span(s) {missing}; has {names}")
+    # cold path: the negotiate miss also built the pallas_call
+    assert "pallas_build" in names, f"cold run never built: {names}"
+    # connected: the subtree IS the whole trace, and everything closed
+    assert len(names) == len(tracer.spans), (
+        f"{len(tracer.spans) - len(names)} span(s) unreachable from "
+        f"the request root")
+    open_spans = [s.name for s in tracer.spans if s.end is None]
+    assert not open_spans, f"unfinished spans: {open_spans}"
+    neg = tracer.named("negotiate")[0]
+    assert neg.attrs.get("outcome") in ("sweep", "disk_hit"), neg.attrs
+    row("obs_span_tree", float(len(tracer.spans)),
+        "one_root_" + "-".join(n for n in dict.fromkeys(names)
+                               if n != "request"))
+
+
+def _virtual_run() -> str:
+    """A deterministic cold workload under a virtual-clock tracer:
+    direct cold+warm dispatch plus a virtual-clock scheduler round."""
+    tracer = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+    with artifact.using_plan_cache(None), obs_trace.using_tracer(tracer):
+        prog_mod.clear_dispatch_caches()
+        fused = isa.fuse("c0_scale", "c0_add")
+        ops_ = _operands()
+        fused(*ops_, mode="interpret")        # cold: negotiate + build
+        fused(*ops_, mode="interpret")        # warm: dispatch only
+        q = RequestQueue()
+        q.submit(fused, ops_, tenant="A", arrival=0.0)
+        q.submit(fused, ops_, tenant="A", arrival=0.0)
+        Scheduler(q, cost=CostModel(hierarchy=TPU_V5E), policy="fifo",
+                  n_lanes=1, clock="virtual").drain()
+    return tracer.export_jsonl()
+
+
+def _check_jsonl_stable() -> None:
+    a, b = _virtual_run(), _virtual_run()
+    assert a, "virtual-clock run produced no spans"
+    assert a == b, (
+        "JSONL export not byte-stable across identical virtual-clock "
+        "runs:\n" + "\n".join(
+            f"-{x}\n+{y}" for x, y in zip(a.splitlines(), b.splitlines())
+            if x != y))
+    row("obs_jsonl_stable", float(len(a.splitlines())),
+        f"bytes:{len(a)}_identical_across_runs")
+
+
+def _check_chrome_trace(tracer: obs_trace.Tracer) -> str:
+    text = tracer.export_chrome()
+    doc = json.loads(text)                    # valid JSON or it throws
+    events = doc["traceEvents"]
+    assert isinstance(events, list) and events, "empty traceEvents"
+    complete = [e for e in events if e.get("ph") == "X"]
+    assert len(complete) == len(tracer.spans)
+    for e in complete:
+        for k in ("name", "ts", "dur", "pid", "tid", "args"):
+            assert k in e, f"event missing {k!r}: {e}"
+        assert e["ts"] >= 0 and e["dur"] >= 0, e
+        assert "span_id" in e["args"] and "parent_id" in e["args"], e
+    row("obs_chrome_trace", float(len(complete)),
+        "complete_X_events_valid_json")
+    return text
+
+
+def _check_drift_ranking() -> None:
+    tr = obs_drift.DriftTracker()
+    for _ in range(3):                        # model 2x too optimistic
+        tr.record(("k", "bad"), 1e-3, 2e-3, name="bad", bucket=8192,
+                  dtype="float32")
+    for _ in range(5):                        # model within 5%
+        tr.record(("k", "good"), 1e-3, 1.05e-3, name="good", bucket=8192,
+                  dtype="float32")
+    rep = tr.report(min_samples=1)
+    assert [r["name"] for r in rep] == ["bad", "good"], rep
+    assert rep[0]["samples"] == 3 and rep[1]["samples"] == 5, rep
+    assert abs(rep[0]["drift"] - 1.0) < 1e-9, rep[0]
+    assert abs(rep[1]["drift"] - 0.05) < 1e-9, rep[1]
+    assert tr.format_report(min_samples=1), "empty drift report text"
+    row("obs_drift_ranking", float(len(rep)),
+        f"top_drift:{rep[0]['drift']:.2f}_ranked_by_|ratio-1|")
+
+
+def _dump_artifacts(chrome_text: str) -> None:
+    out = os.environ.get("REPRO_OBS_DIR", ".")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "OBS_trace.json"), "w") as f:
+        f.write(chrome_text)
+    text = obs_metrics.REGISTRY.expose_text()
+    assert "repro_dispatch_geometry_misses_total" in text, text[:400]
+    assert "repro_sched_latency_seconds_bucket" in text, text[:400]
+    with open(os.path.join(out, "OBS_metrics.txt"), "w") as f:
+        f.write(text)
+    snap = obs_metrics.REGISTRY.snapshot_json()
+    json.loads(snap)                          # must be valid JSON
+    with open(os.path.join(out, "OBS_metrics.json"), "w") as f:
+        f.write(snap)
+    row("obs_artifacts", 3.0, f"trace+metrics_into:{out}")
+
+
+def main() -> None:
+    tracer = _serve_one_request()
+    _check_span_tree(tracer)
+    _check_jsonl_stable()
+    chrome_text = _check_chrome_trace(tracer)
+    _check_drift_ranking()
+    _dump_artifacts(chrome_text)
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,15 @@ Layout and guarantees
   ``fingerprint()``) are meaningless in another process, so keys
   containing them are refused for disk sharing entirely — see
   :func:`persistable_fingerprint`.
+* **Bounded growth** — publishing runs an mtime-based LRU sweep when a
+  size bound is configured (``PlanCache(max_entries=, max_bytes=)`` or
+  ``REPRO_PLAN_CACHE_ENTRIES``/``REPRO_PLAN_CACHE_BYTES``); evictions
+  are observable as ``repro_dispatch_disk_evict_total`` (DESIGN.md §15).
+
+Besides geometries and plans, the scheduler's cost model persists its
+EWMA corrections here (``kind="ewma"``, see
+:meth:`repro.sched.cost.CostModel` / DESIGN.md §15) so a restarted
+fleet warm-starts its *predictions*, not just its geometries.
 
 Activation
 ----------
@@ -59,14 +68,25 @@ from typing import Any, Callable, Optional
 ARTIFACT_VERSION = 1
 
 ENV_VAR = "REPRO_PLAN_CACHE"
+# GC bounds for env-activated caches (both optional; see PlanCache):
+ENV_MAX_ENTRIES = "REPRO_PLAN_CACHE_ENTRIES"
+ENV_MAX_BYTES = "REPRO_PLAN_CACHE_BYTES"
 
 
 def _stats():
-    """The live DISPATCH_STATS. Looked up lazily through the module —
-    ``reset_dispatch_stats()`` REBINDS the global, so a from-import
-    taken at import time would silently count against a dead object."""
+    """The live DISPATCH_STATS view (registry-backed since ISSUE 7 —
+    DESIGN.md §15). Looked up lazily through the module to avoid an
+    import cycle and to stay correct if the global is ever rebound."""
     from . import program as _program
     return _program.DISPATCH_STATS
+
+
+def _env_int(name: str) -> Optional[int]:
+    try:
+        v = int(os.environ.get(name, ""))
+        return v if v > 0 else None
+    except ValueError:
+        return None
 
 
 def jsonable(obj) -> Any:
@@ -117,10 +137,25 @@ class PlanCache:
     ``load`` answers None for anything it cannot fully verify, ``store``
     returns False instead of raising — persistence failures degrade to
     a recompile, never to a crash or a wrong result.
+
+    Garbage collection (DESIGN.md §14/§15): long-lived fleet dirs grow
+    monotonically without a bound, so ``store`` runs an mtime-based LRU
+    sweep when ``max_entries`` / ``max_bytes`` is set (explicitly or via
+    ``REPRO_PLAN_CACHE_ENTRIES`` / ``REPRO_PLAN_CACHE_BYTES``): oldest
+    entries are unlinked until the dir fits, counted in
+    ``DISPATCH_STATS.disk_evict`` (exposed as the registry counter
+    ``repro_dispatch_disk_evict_total``). ``load`` hits re-touch the
+    entry's mtime so hot artifacts survive the sweep. The entry being
+    published is always retained.
     """
 
-    def __init__(self, path):
+    def __init__(self, path, max_entries: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
         self.path = os.fspath(path)
+        self.max_entries = (max_entries if max_entries is not None
+                            else _env_int(ENV_MAX_ENTRIES))
+        self.max_bytes = (max_bytes if max_bytes is not None
+                          else _env_int(ENV_MAX_BYTES))
 
     def __repr__(self) -> str:
         return f"PlanCache({self.path!r})"
@@ -174,6 +209,10 @@ class PlanCache:
                 self._unlink(path)
                 return None
         stats.disk_hit += 1
+        try:
+            os.utime(path, None)   # LRU recency for the GC sweep
+        except OSError:
+            pass
         return payload
 
     def store(self, kind: str, key, payload) -> bool:
@@ -197,11 +236,59 @@ class PlanCache:
                 self._unlink(tmp)
             return False
         _stats().disk_store += 1
+        if self.max_entries or self.max_bytes:
+            self._sweep(keep=path)
         return True
 
     def invalidate(self, kind: str, key) -> None:
         """Drop one entry (best-effort)."""
         self._unlink(self.entry_path(kind, key))
+
+    def _sweep(self, keep: Optional[str] = None) -> int:
+        """Mtime-based LRU sweep: unlink oldest ``*.json`` entries until
+        the dir fits ``max_entries``/``max_bytes``. ``keep`` (the entry
+        just published) is never evicted. Best-effort: races with
+        concurrent workers (an entry vanishing mid-scan) are ignored.
+        Returns the number of evictions."""
+        entries = []
+        try:
+            with os.scandir(self.path) as it:
+                for de in it:
+                    if not de.name.endswith(".json"):
+                        continue
+                    try:
+                        st = de.stat()
+                    except OSError:
+                        continue
+                    entries.append((st.st_mtime, de.name, de.path,
+                                    st.st_size))
+        except OSError:
+            return 0
+        total = sum(e[3] for e in entries)
+        count = len(entries)
+        over = ((self.max_entries and count > self.max_entries)
+                or (self.max_bytes and total > self.max_bytes))
+        if not over:
+            return 0
+        entries.sort()                      # oldest mtime first, then name
+        evicted = 0
+        keep = os.path.abspath(keep) if keep else None
+        for mtime, name, path, size in entries:
+            if ((not self.max_entries or count <= self.max_entries)
+                    and (not self.max_bytes or total <= self.max_bytes)):
+                break
+            if keep and os.path.abspath(path) == keep:
+                continue
+            try:
+                os.unlink(path)
+            except OSError:
+                continue
+            count -= 1
+            total -= size
+            evicted += 1
+        if evicted:
+            _stats().disk_evict += evicted
+        return evicted
 
 
 # -- process-wide active cache ----------------------------------------------

@@ -55,6 +55,15 @@ atomically published back, so a fresh worker pointed at a populated
 cache dir re-negotiates NOTHING (``DISPATCH_STATS.disk_*`` counts the
 traffic; ``benchmarks/bench_aot.py`` gates the warm subprocess).
 
+Observability (DESIGN.md §15): the dispatch path emits structured
+spans — ``dispatch`` around every ``__call__``/``call_batch``,
+``negotiate`` around a memo-miss sweep (outcome ``disk_hit`` vs
+``sweep``), ``pallas_build`` around a cold jit build — through
+:mod:`repro.obs.trace` (no-ops when no tracer is active), and
+:data:`DISPATCH_STATS` is a thin view over registry-backed
+``repro_dispatch_*_total`` counters in :mod:`repro.obs.metrics`;
+``bench_hotpath`` gates the instrumented warm path at ≤ 3% overhead.
+
 Serving entry points (DESIGN.md §13): :meth:`Program.call_batch`
 coalesces N same-structure requests into ONE launch sharing one warm
 dispatch (the :mod:`repro.sched` queue's batch path), and observed-time
@@ -76,6 +85,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
 from . import artifact as _artifact
 from .burst_model import BurstModel, TPU_V5E_HBM
 from .stream import (LANES, VMEM_BYTES, StreamConfig, _bits,
@@ -93,9 +105,18 @@ _BLOCK_COL_CANDIDATES = tuple(LANES * (1 << k) for k in range(7))
 # dispatch caching (DESIGN.md §12)
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class DispatchStats:
-    """Counters behind the warm-dispatch gates in bench_hotpath."""
+    """Frozen snapshot of the warm-dispatch counters.
+
+    Since ISSUE 7 the live counters are registry-backed
+    (``repro.obs.metrics``, one ``repro_dispatch_<field>_total`` counter
+    per field — DESIGN.md §15); :data:`DISPATCH_STATS` is a thin
+    attribute view over them whose :meth:`_DispatchStatsView.snapshot`
+    returns an instance of this dataclass. Diff two snapshots (or use
+    :func:`dispatch_stats_window`) instead of reading ambient values —
+    the counters are process-global.
+    """
 
     geometry_hits: int = 0       # negotiations answered from the cache
     geometry_misses: int = 0     # negotiations that ran the candidate loop
@@ -110,9 +131,103 @@ class DispatchStats:
     disk_invalidated: int = 0    # stale/wrong-key/version-drift entries dropped
     disk_corrupt: int = 0        # unreadable/truncated entries dropped
     disk_store: int = 0          # artifacts atomically published to disk
+    disk_evict: int = 0          # artifacts removed by the LRU size sweep
 
 
-DISPATCH_STATS = DispatchStats()
+_STAT_FIELDS = tuple(f.name for f in dataclasses.fields(DispatchStats))
+
+
+class _DispatchStatsView:
+    """Attribute view over the registry-backed dispatch counters.
+
+    Preserves the historical mutable-dataclass API —
+    ``DISPATCH_STATS.geometry_hits += 1`` works unchanged at every call
+    site — while the authoritative values live in
+    ``repro.obs.metrics.REGISTRY`` as ``repro_dispatch_<field>_total``
+    counters (visible to the Prometheus exposition and JSON snapshot).
+    """
+
+    __slots__ = ("_counters",)
+
+    def __init__(self):
+        counters = {}
+        for f in _STAT_FIELDS:
+            counters[f] = _metrics.REGISTRY.counter(
+                f"repro_dispatch_{f}_total",
+                help=f"dispatch counter {f} (core/program.py)")
+        object.__setattr__(self, "_counters", counters)
+
+    def __getattr__(self, name):
+        try:
+            return self._counters[name].value
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def __setattr__(self, name, value):
+        try:
+            self._counters[name].set(value)
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def snapshot(self) -> DispatchStats:
+        return DispatchStats(**{f: c.value
+                                for f, c in self._counters.items()})
+
+    def reset(self) -> None:
+        for c in self._counters.values():
+            c.reset()
+
+    def __eq__(self, other):
+        if isinstance(other, (DispatchStats, _DispatchStatsView)):
+            return all(getattr(self, f) == getattr(other, f)
+                       for f in _STAT_FIELDS)
+        return NotImplemented
+
+    def __repr__(self):
+        return repr(self.snapshot()).replace("DispatchStats",
+                                             "DispatchStatsView", 1)
+
+
+DISPATCH_STATS = _DispatchStatsView()
+
+
+class StatsWindow:
+    """Scoped delta reader over :data:`DISPATCH_STATS`.
+
+    The counters are process-global, so a test asserting "this block
+    negotiated nothing" must compare against a baseline taken at block
+    entry, never against ambient values. ``w.delta(field)`` is the
+    change since the window opened; ``w.deltas()`` the full snapshot
+    diff."""
+
+    def __init__(self, view: _DispatchStatsView):
+        self._view = view
+        self.start = view.snapshot()
+
+    def delta(self, field: str) -> int:
+        return getattr(self._view, field) - getattr(self.start, field)
+
+    def deltas(self) -> DispatchStats:
+        now = self._view.snapshot()
+        return DispatchStats(**{f: getattr(now, f) - getattr(self.start, f)
+                                for f in _STAT_FIELDS})
+
+
+class _StatsWindowCtx:
+    __slots__ = ("_window",)
+
+    def __enter__(self) -> StatsWindow:
+        self._window = StatsWindow(DISPATCH_STATS)
+        return self._window
+
+    def __exit__(self, *a):
+        return False
+
+
+def dispatch_stats_window() -> _StatsWindowCtx:
+    """``with dispatch_stats_window() as w: ...; w.delta("disk_hit")`` —
+    the test-isolation primitive for counter assertions."""
+    return _StatsWindowCtx()
 
 # Observed-time hooks (DESIGN.md §13): callables
 #   hook(program, n_elems, dtype_name, seconds, n_items)
@@ -182,8 +297,7 @@ _DISPATCH_CACHE_MAX = 256
 
 
 def reset_dispatch_stats() -> None:
-    global DISPATCH_STATS
-    DISPATCH_STATS = DispatchStats()
+    DISPATCH_STATS.reset()
 
 
 def clear_dispatch_caches() -> None:
@@ -507,6 +621,15 @@ class Program:
             if hit[0] == "no-fit":
                 raise ValueError(hit[1])
             return hit
+        # memo miss: everything below is span-worthy work (DESIGN.md
+        # §15 — "negotiate" span, outcome disk_hit | sweep | no_fit).
+        _tr = _trace.ACTIVE
+        _sp = (_tr.start_span("negotiate", program=self.name,
+                              n_elems=int(n_elems),
+                              dtype=_dtype_name(dtype),
+                              bucket=_n_bucket(n_elems),
+                              fingerprint=_artifact.key_hash(key))
+               if _tr is not None else None)
         # in-process miss: consult the persistent artifact cache before
         # paying the candidate sweep (DESIGN.md §14). Token-fingerprinted
         # models are process-local and never share disk entries.
@@ -518,6 +641,9 @@ class Program:
             if loaded is not None:
                 DISPATCH_STATS.geometry_hits += 1
                 _cache_geometry(key, loaded)
+                if _sp is not None:
+                    _tr.finish(_sp, outcome="disk_hit",
+                               no_fit=loaded[0] == "no-fit")
                 if loaded[0] == "no-fit":
                     raise ValueError(loaded[1])
                 return loaded
@@ -555,12 +681,17 @@ class Program:
             _cache_geometry(key, verdict)
             if disk is not None:
                 disk.store("geom", key, _geometry_payload(verdict))
+            if _sp is not None:
+                _tr.finish(_sp, outcome="sweep", no_fit=True)
             raise ValueError(msg)
         t, bc, cfg = best
         result = (block_rows, bc, cfg, t)
         _cache_geometry(key, result)
         if disk is not None:
             disk.store("geom", key, _geometry_payload(result))
+        if _sp is not None:
+            _tr.finish(_sp, outcome="sweep", block=[block_rows, bc],
+                       modeled_s=t)
         return result
 
     # -- kernel emission ----------------------------------------------------
@@ -662,7 +793,22 @@ class Program:
         if cached is not None:
             return cached(*scalars, *vectors)
         DISPATCH_STATS.call_builds += 1
+        _sp = _trace.span("pallas_build", program=self.name,
+                          block=[block_rows, block_cols],
+                          interpret=bool(interpret))
+        with _sp:
+            fn = self._build_call(stages, scalars, vectors, out_shape,
+                                  block_rows, block_cols, grid, cols,
+                                  interpret)
+        if len(self._exe_cache) >= _EXE_CACHE_MAX:
+            self._exe_cache.pop(next(iter(self._exe_cache)))
+        self._exe_cache[sig] = fn
+        return fn(*scalars, *vectors)
 
+    def _build_call(self, stages, scalars, vectors, out_shape, block_rows,
+                    block_cols, grid, cols, interpret):
+        """Construct the jitted ``pallas_call`` for one operand
+        signature (the cold half of :meth:`call_blocks`)."""
         blockspec = pl.BlockSpec((block_rows, block_cols),
                                  lambda r, c: (r, c))
         in_specs = ([pl.BlockSpec(memory_space=pltpu.SMEM)] * len(scalars)
@@ -702,10 +848,7 @@ class Program:
             interpret=interpret,
             compiler_params=compiler_params,
         ))
-        if len(self._exe_cache) >= _EXE_CACHE_MAX:
-            self._exe_cache.pop(next(iter(self._exe_cache)))
-        self._exe_cache[sig] = fn
-        return fn(*scalars, *vectors)
+        return fn
 
     def _check_vectors(self, per_stage):
         """Validate external vector operand consistency: identical shapes
@@ -810,14 +953,20 @@ class Program:
         ref_v = flat_vecs[0]
         n = ref_v.size
 
-        block_rows, block_cols = self._resolve_geometry(n, ref_v.dtype)
-        norm = []
-        for sc, ext in per_stage:
-            norm.extend(sc)
-            norm.extend(flatten_to_blocks(v, block_cols, block_rows)[0]
-                        for v in ext)
-        out = self.call_blocks(*norm, block_rows=block_rows,
-                               block_cols=block_cols, interpret=interpret)
+        with _trace.span("dispatch", program=self.name, n_elems=int(n),
+                         dtype=_dtype_name(ref_v.dtype),
+                         bucket=_n_bucket(n), n_items=1) as _sp:
+            block_rows, block_cols = self._resolve_geometry(n, ref_v.dtype)
+            if _sp is not None:
+                _sp.attrs["block"] = [block_rows, block_cols]
+            norm = []
+            for sc, ext in per_stage:
+                norm.extend(sc)
+                norm.extend(flatten_to_blocks(v, block_cols, block_rows)[0]
+                            for v in ext)
+            out = self.call_blocks(*norm, block_rows=block_rows,
+                                   block_cols=block_cols,
+                                   interpret=interpret)
         outs = out if isinstance(out, (tuple, list)) else (out,)
         outs = tuple(o.reshape(-1)[:n].reshape(ref_v.shape) for o in outs)
         result = outs[0] if len(outs) == 1 else outs
@@ -875,37 +1024,45 @@ class Program:
                     f"operand values (item {k} differs)")
 
         n = ref_vecs[0][0].size
-        block_rows, block_cols = self._resolve_geometry(n, dtype)
-        # Per-item normalised rows (identical across items — same shape):
-        # cols padded up to whole blocks exactly as flatten_to_blocks.
-        rows_raw = -(-n // block_cols)
-        rows_per_item = round_up(rows_raw, block_rows)
-        padded_n = rows_per_item * block_cols
+        with _trace.span("dispatch", program=self.name, n_elems=int(n),
+                         dtype=_dtype_name(dtype), bucket=_n_bucket(n),
+                         n_items=len(batch)) as _sp:
+            block_rows, block_cols = self._resolve_geometry(n, dtype)
+            if _sp is not None:
+                _sp.attrs["block"] = [block_rows, block_cols]
+            # Per-item normalised rows (identical across items — same
+            # shape): cols padded up to whole blocks exactly as
+            # flatten_to_blocks.
+            rows_raw = -(-n // block_cols)
+            rows_per_item = round_up(rows_raw, block_rows)
+            padded_n = rows_per_item * block_cols
 
-        def stack_slot(vs):
-            """Stack one operand slot's per-item vectors into the padded
-            2-D batch layout — the same bytes a vstack of per-item
-            ``flatten_to_blocks`` results would hold, in O(1) jax ops
-            per slot instead of O(items)."""
-            flat = jnp.stack(vs).reshape(len(vs), n)
-            if padded_n != n:
-                flat = jnp.pad(flat, ((0, 0), (0, padded_n - n)))
-            return flat.reshape(len(vs) * rows_per_item, block_cols)
+            def stack_slot(vs):
+                """Stack one operand slot's per-item vectors into the
+                padded 2-D batch layout — the same bytes a vstack of
+                per-item ``flatten_to_blocks`` results would hold, in
+                O(1) jax ops per slot instead of O(items)."""
+                flat = jnp.stack(vs).reshape(len(vs), n)
+                if padded_n != n:
+                    flat = jnp.pad(flat, ((0, 0), (0, padded_n - n)))
+                return flat.reshape(len(vs) * rows_per_item, block_cols)
 
-        # rebuild program operand order: per stage, scalars then stacked
-        # external vectors (scalars come from item 0 — validated equal).
-        norm = []
-        slot = 0
-        per_slot = [[per[si][1][vi] for per in items]
-                    for si, (_, ext0) in enumerate(items[0])
-                    for vi in range(len(ext0))]
-        for sc, ext in items[0]:
-            norm.extend(sc)
-            for _ in ext:
-                norm.append(stack_slot(per_slot[slot]))
-                slot += 1
-        out = self.call_blocks(*norm, block_rows=block_rows,
-                               block_cols=block_cols, interpret=interpret)
+            # rebuild program operand order: per stage, scalars then
+            # stacked external vectors (scalars come from item 0 —
+            # validated equal).
+            norm = []
+            slot = 0
+            per_slot = [[per[si][1][vi] for per in items]
+                        for si, (_, ext0) in enumerate(items[0])
+                        for vi in range(len(ext0))]
+            for sc, ext in items[0]:
+                norm.extend(sc)
+                for _ in ext:
+                    norm.append(stack_slot(per_slot[slot]))
+                    slot += 1
+            out = self.call_blocks(*norm, block_rows=block_rows,
+                                   block_cols=block_cols,
+                                   interpret=interpret)
         outs = out if isinstance(out, (tuple, list)) else (out,)
         # un-stack in O(1) jax ops per output, then view out the items
         k_items = len(batch)

@@ -44,6 +44,7 @@ from typing import Any, Optional, Sequence
 import jax
 
 from repro.core.stream import _bits
+from repro.obs import trace as _trace
 
 from .ir import Graph, Node, Scalar, Value
 
@@ -273,17 +274,21 @@ class Plan:
         reg = self.graph.registry
         mode = resolve_auto(mode or reg.mode)
         part = self.parts[idx]
-        if part.program is not None:
-            ops: list[Any] = []
-            for i, node in enumerate(part.nodes):
-                k = part.nodes[i - 1].n_vec_out if i else 0
-                ops.extend(scal[s] for s in node.scalar_in)
-                ops.extend(vals[v] for v in node.vec_in[k:])
-            return part.program(*ops, interpret=(mode == "interpret"))
-        node = part.nodes[0]
-        ops = [vals[o] if isinstance(o, Value) else scal[o]
-               for o in node.operands]
-        return reg.dispatch(node.name, *ops, mode=mode)
+        # "part" span (DESIGN.md §15): one per schedulable unit, so a
+        # plan's dispatch tree shows each chain under its placement.
+        with _trace.span("part", plan=self.graph.name, index=idx,
+                         chain=[n.name for n in part.nodes]):
+            if part.program is not None:
+                ops: list[Any] = []
+                for i, node in enumerate(part.nodes):
+                    k = part.nodes[i - 1].n_vec_out if i else 0
+                    ops.extend(scal[s] for s in node.scalar_in)
+                    ops.extend(vals[v] for v in node.vec_in[k:])
+                return part.program(*ops, interpret=(mode == "interpret"))
+            node = part.nodes[0]
+            ops = [vals[o] if isinstance(o, Value) else scal[o]
+                   for o in node.operands]
+            return reg.dispatch(node.name, *ops, mode=mode)
 
     def bind_part_outputs(self, idx: int, out, vals) -> None:
         """Bind one part's outputs into the value environment."""

@@ -12,6 +12,15 @@ are predicted from the machine's actual behaviour, deadline misses are
 reported, and ``--sched-trace`` records the whole run as a replayable
 JSONL trace (``python -m repro.sched.replay`` it offline to compare
 policies on the production arrival sequence).
+
+Observability (DESIGN.md §15): ``--metrics PORT`` serves the process
+metrics registry over HTTP — Prometheus text at ``/metrics``, JSON
+snapshot at ``/metrics.json`` — for the whole run (``--metrics-hold``
+keeps the process alive afterwards so external scrapers can fetch a
+final state; CI's smoke step curls it). ``--obs-trace PATH`` activates the
+span tracer and writes the run's Chrome-trace/Perfetto JSON to PATH,
+and a modeled-vs-observed drift report is printed after a ``--sched``
+run when any completions were recorded.
 """
 from __future__ import annotations
 
@@ -63,11 +72,36 @@ def main(argv=None):
                         "are loaded from / published to DIR, so a restarted "
                         "or replicated server skips the cold compile work; "
                         "equivalent to REPRO_PLAN_CACHE in the environment")
+    p.add_argument("--metrics", type=int, default=None, metavar="PORT",
+                   help="serve the metrics registry over HTTP on PORT: "
+                        "Prometheus text at /metrics, JSON snapshot at "
+                        "/metrics.json (DESIGN.md §15)")
+    p.add_argument("--metrics-hold", type=float, default=0.0, metavar="SEC",
+                   help="with --metrics: keep the process (and endpoint) "
+                        "alive SEC seconds after the run so scrapers can "
+                        "fetch the final state")
+    p.add_argument("--obs-trace", default=None, metavar="PATH",
+                   help="activate the span tracer and write the run's "
+                        "Chrome-trace JSON to PATH (open in Perfetto / "
+                        "chrome://tracing)")
     args = p.parse_args(argv)
 
     if args.plan_cache:
         from repro.core.artifact import set_plan_cache
         set_plan_cache(args.plan_cache)
+
+    httpd = None
+    if args.metrics is not None:
+        from repro.obs import metrics as obs_metrics
+        httpd = obs_metrics.start_http_server(args.metrics)
+        host, port = httpd.server_address[:2]
+        print(f"metrics http://{host}:{port}/metrics "
+              f"(+ /metrics.json)")
+    tracer = None
+    if args.obs_trace:
+        from repro.obs import trace as obs_trace
+        tracer = obs_trace.Tracer()
+        obs_trace.set_tracer(tracer)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -120,6 +154,15 @@ def main(argv=None):
         print(f"decoded {args.gen} tokens × batch {args.batch} in "
               f"{dt*1e3:.1f} ms ({args.batch*(args.gen-1)/max(dt,1e-9):.0f} tok/s)")
         print("sample row:", gen[0][:16], "...")
+        if tracer is not None:
+            with open(args.obs_trace, "w") as f:
+                f.write(tracer.export_chrome())
+            print(f"obs trace ({len(tracer.spans)} spans) -> "
+                  f"{args.obs_trace}")
+        if httpd is not None and args.metrics_hold > 0:
+            print(f"holding metrics endpoint {args.metrics_hold:.0f}s",
+                  flush=True)
+            time.sleep(args.metrics_hold)
         return gen
 
 
@@ -176,6 +219,8 @@ def _decode_scheduled(args, decode, sample_fn, params, cache, tok, rng,
         recorder.dump(args.sched_trace)
         print(f"sched trace ({len(recorder.events)} events) -> "
               f"{args.sched_trace}")
+    if cost.drift_report(min_samples=1):
+        print(cost.drift.format_report(top=5, min_samples=1))
     return np.concatenate(out_tokens, axis=1), dt
 
 

@@ -1,0 +1,32 @@
+"""repro.obs — unified telemetry: spans, metrics, drift (DESIGN.md §15).
+
+Three small, dependency-free modules threaded through the whole request
+lifecycle:
+
+* :mod:`repro.obs.trace` — structured spans (admission → coalesce →
+  negotiate → dispatch → placement) with parent/child links; byte-stable
+  JSONL and Chrome-trace/Perfetto exports.
+* :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket
+  histograms in one process-global registry; Prometheus text
+  exposition and a JSON snapshot (``launch/serve.py --metrics``).
+* :mod:`repro.obs.drift` — modeled-vs-observed residual ratios per
+  (fingerprint, bucket, dtype), ranked by where memhier is most wrong.
+
+All instrumentation is near-zero when off: ``bench_hotpath`` gates the
+warm-dispatch overhead with tracing+metrics enabled at ≤ 3% vs
+disabled.
+"""
+from repro.obs.drift import DriftCell, DriftTracker, watch_programs
+from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                               MetricsRegistry, REGISTRY, default_registry,
+                               start_http_server)
+from repro.obs.trace import (NULL_SPAN, Span, Tracer, VirtualClock,
+                             get_tracer, set_tracer, span, using_tracer)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "DEFAULT_BUCKETS", "default_registry", "start_http_server",
+    "Span", "Tracer", "VirtualClock", "NULL_SPAN",
+    "get_tracer", "set_tracer", "span", "using_tracer",
+    "DriftCell", "DriftTracker", "watch_programs",
+]

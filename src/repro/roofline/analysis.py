@@ -240,10 +240,13 @@ def dispatch_cache_report() -> dict:
         all fall back to recompilation, never to an error).
 
     Bench suites embed these in their JSON rows; callers wanting a
-    clean window should ``reset_dispatch_stats()`` first.
+    clean window should ``reset_dispatch_stats()`` first (or diff two
+    reports — the counters are the registry-backed
+    ``repro_dispatch_*_total`` series of :mod:`repro.obs.metrics`, see
+    DESIGN.md §15, and this report is one fixed view over them).
     """
     from repro.core import program as prog_mod
-    s = prog_mod.DISPATCH_STATS
+    s = prog_mod.DISPATCH_STATS.snapshot()
     rep = dataclasses.asdict(s)
     n_geo = s.geometry_hits + s.geometry_misses
     rep["geometry_hit_rate"] = s.geometry_hits / n_geo if n_geo else 0.0

@@ -22,23 +22,70 @@ Three layers (DESIGN.md §13):
     overlaps freely but the summed (correction-scaled) DRAM busy times
     serialise on the shared interface — closing the ROADMAP item that
     plan overlap treated HBM ports as free.
+
+Two ISSUE 7 extensions (DESIGN.md §15):
+
+  * **Drift tracking** — every ``observe()`` also feeds the model's
+    :class:`repro.obs.drift.DriftTracker`, accumulating raw
+    observed/modeled residuals per EWMA cell so
+    :meth:`CostModel.drift_report` can rank where memhier is most
+    wrong — separately from the correction that papers over it.
+  * **EWMA persistence** — when a plan cache is active
+    (:mod:`repro.core.artifact`), corrections are published as
+    ``kind="ewma"`` artifacts keyed on the EWMA key (value-based, so
+    stable across processes) and consulted once per key on the first
+    in-memory miss: a restarted fleet warm-starts its *predictions*,
+    not just its geometries.
 """
 from __future__ import annotations
 
 import contextlib
 import copy
 import dataclasses
+import math
 from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core import artifact as _artifact
 from repro.core.burst_model import BurstModel
 from repro.core.program import (Program, _model_fingerprint, _n_bucket,
                                 pop_observed_time_hook,
                                 push_observed_time_hook)
 from repro.graph.plan import Plan
+from repro.obs.drift import DriftTracker
 
 from .queue import WorkItem, program_of
+
+
+def _target_name(target) -> str:
+    prog = program_of(target)
+    if prog is not None:
+        return prog.name
+    if isinstance(target, Plan):
+        return target.graph.name
+    return getattr(target, "__qualname__", type(target).__name__)
+
+
+def _ewma_payload(raw):
+    """Validating decoder for persisted ``kind="ewma"`` artifacts;
+    None (= invalidated) for anything malformed."""
+    if not isinstance(raw, dict):
+        return None
+
+    def ok(v):
+        return v is None or (isinstance(v, (int, float))
+                             and not isinstance(v, bool)
+                             and v > 0 and math.isfinite(v))
+
+    ratio, abs_s, count = raw.get("ratio"), raw.get("abs"), raw.get("count")
+    if not ok(ratio) or not ok(abs_s):
+        return None
+    if not isinstance(count, int) or isinstance(count, bool) or count < 0:
+        return None
+    if ratio is None and abs_s is None:
+        return None
+    return (ratio, abs_s, count)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +123,12 @@ class CostModel:
         self._abs: dict = {}          # EWMA of observed seconds (callables)
         self._count: dict = {}        # observations folded in per key
         self._seed_cache: dict = {}
+        # keys whose persisted correction was already consulted (hit or
+        # miss) — one disk probe per key per process, never on the
+        # warm path.
+        self._ewma_checked: set = set()
+        #: raw modeled-vs-observed residuals (repro.obs.drift)
+        self.drift = DriftTracker()
 
     # -- keys -----------------------------------------------------------------
     def ewma_key(self, target, n_elems: Optional[int], dtype,
@@ -178,6 +231,7 @@ class CostModel:
             dtype = dtype if dtype is not None else target.dtype
         modeled, busy, nbytes, source = self.seed(target, n_elems, dtype)
         key = self.ewma_key(target, n_elems, dtype, cost_key)
+        self._warm_ewma(key)
         if source == "default" and key in self._abs:
             # opaque targets: prediction IS the observed EWMA.
             obs = self._abs[key]
@@ -214,6 +268,7 @@ class CostModel:
             raise ValueError(f"observed seconds must be >= 0, got {seconds}")
         per_item = seconds / max(1, n_items)
         key = self.ewma_key(target, n_elems, dtype, cost_key)
+        self._warm_ewma(key)   # continue a persisted EWMA, don't restart
         n_seen = self._count.get(key, 0)
         self._count[key] = n_seen + 1
         modeled, _, _, source = self.seed(target, n_elems, dtype)
@@ -221,11 +276,59 @@ class CostModel:
             prev = self._abs.get(key)
             self._abs[key] = (per_item if n_seen <= 1 or prev is None else
                               (1 - self.alpha) * prev + self.alpha * per_item)
+            self._persist_ewma(key)
             return
         sample = per_item / modeled if modeled > 0 else 1.0
         prev = self._ratio.get(key)
         self._ratio[key] = (sample if n_seen <= 1 or prev is None else
                             (1 - self.alpha) * prev + self.alpha * sample)
+        self._persist_ewma(key)
+        # raw residual alongside the correction (DESIGN.md §15): the
+        # EWMA *adapts to* model error, the drift tracker *reports* it.
+        self.drift.record(
+            key, modeled, per_item, name=_target_name(target),
+            bucket=_n_bucket(n_elems) if n_elems else 0,
+            dtype=(np.dtype(dtype).name if dtype is not None else "none"),
+            ewma_ratio=self._ratio.get(key))
+
+    def drift_report(self, top: Optional[int] = None,
+                     min_samples: int = 1) -> list:
+        """Cells ranked by |mean(observed/modeled) − 1|, worst first —
+        see :meth:`repro.obs.drift.DriftTracker.report`."""
+        return self.drift.report(top=top, min_samples=min_samples)
+
+    # -- persistence (kind="ewma", DESIGN.md §15) ------------------------------
+    def _warm_ewma(self, key) -> None:
+        """One-shot disk consult for a key with no in-memory correction
+        (no-op without an active plan cache)."""
+        if key in self._ewma_checked:
+            return
+        self._ewma_checked.add(key)
+        if key in self._ratio or key in self._abs:
+            return
+        cache = _artifact.plan_cache()
+        if cache is None:
+            return
+        loaded = cache.load("ewma", key, decode=_ewma_payload)
+        if loaded is None:
+            return
+        ratio, abs_s, count = loaded
+        if ratio is not None:
+            self._ratio[key] = ratio
+        if abs_s is not None:
+            self._abs[key] = abs_s
+        if count:
+            self._count[key] = max(self._count.get(key, 0), count)
+
+    def _persist_ewma(self, key) -> None:
+        cache = _artifact.plan_cache()
+        if cache is None:
+            return
+        cache.store("ewma", key, {
+            "ratio": self._ratio.get(key),
+            "abs": self._abs.get(key),
+            "count": self._count.get(key, 0),
+        })
 
     @contextlib.contextmanager
     def attach(self):

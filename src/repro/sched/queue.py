@@ -17,6 +17,14 @@ single ``pallas_call`` sharing one warm dispatch (geometry fingerprints
 and the dispatch caches of DESIGN.md §12), so a popped batch costs one
 launch instead of N. Plans, shape-changing programs, and arbitrary
 callables never coalesce — they batch as singletons.
+
+Observability (DESIGN.md §15): with a tracer active, ``submit`` opens
+the per-request root span (``request``, carried on
+:attr:`WorkItem.span` and finished by the scheduler at completion)
+with an ``admission`` child, and ``pop_ready`` emits one ``coalesce``
+span per formed batch, parented to the batch's first member. Queue
+depth at every pop is recorded in the
+``repro_sched_queue_depth`` histogram.
 """
 from __future__ import annotations
 
@@ -30,6 +38,18 @@ import numpy as np
 from repro.core.isa import FusedProgram
 from repro.core.program import Program
 from repro.graph.plan import Plan
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+# Queue-depth histogram: item counts, so buckets are small integers.
+QUEUE_DEPTH_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0,
+                       256.0, 512.0, 1024.0)
+_QUEUE_DEPTH = _metrics.REGISTRY.histogram(
+    "repro_sched_queue_depth",
+    help="pending items at each pop_ready drain",
+    buckets=QUEUE_DEPTH_BUCKETS)
+_SUBMITS = _metrics.REGISTRY.counter(
+    "repro_sched_submits_total", help="admitted work items")
 
 
 def program_of(target) -> Optional[Program]:
@@ -99,6 +119,9 @@ class WorkItem:
     lane: Optional[int] = None
     start: Optional[float] = None
     finish: Optional[float] = None
+    # root "request" span (repro.obs.trace), None when tracing is off;
+    # opened at submit, finished by the scheduler at completion.
+    span: Any = None
 
     @property
     def n_elems(self) -> Optional[int]:
@@ -193,12 +216,26 @@ class RequestQueue:
         self._admit(target, operands)
         if weight <= 0:
             raise ValueError(f"weight must be positive, got {weight}")
-        item = WorkItem(seq=next(self._seq), target=target,
+        seq = next(self._seq)
+        tr = _trace.ACTIVE
+        root = None
+        if tr is not None:
+            root = tr.start_span("request", parent=None, seq=seq,
+                                 tenant=tenant, arrival=float(arrival),
+                                 deadline=deadline)
+        with (_trace.NULL_SPAN if tr is None
+              else tr.span("admission", parent=root, seq=seq)) as adm:
+            key = coalesce_key(target, operands)
+            if adm is not None:
+                adm.attrs["coalesce_key"] = (None if key is None
+                                             else repr(key))
+        item = WorkItem(seq=seq, target=target,
                         operands=tuple(operands), deadline=deadline,
                         arrival=float(arrival), tenant=tenant,
                         weight=float(weight), mode=mode, cost_key=cost_key,
-                        key=coalesce_key(target, operands))
+                        key=key, span=root)
         self.pending.append(item)
+        _SUBMITS.inc()
         return item
 
     def next_arrival(self, after: float) -> Optional[float]:
@@ -212,6 +249,7 @@ class RequestQueue:
         Groups keep submission order (a batch sorts at its earliest
         member's seq) so policies tie-break deterministically.
         """
+        _QUEUE_DEPTH.observe(len(self.pending))
         if now is None:
             take, keep = self.pending, []
         else:
@@ -228,4 +266,12 @@ class RequestQueue:
                 groups[gk] = b
                 order.append(b)
             b.items.append(it)
+        tr = _trace.ACTIVE
+        if tr is not None:
+            for b in order:
+                with tr.span("coalesce", parent=b.items[0].span,
+                             batch_seq=b.seq, n_items=len(b.items),
+                             coalesced=b.coalesced,
+                             members=[it.seq for it in b.items]):
+                    pass
         return order

@@ -19,6 +19,14 @@ placements must be identical to the recorded ones (the ``bench_sched``
 determinism gate). That makes scheduling policies benchmarkable offline
 from production traces, the same way :mod:`repro.memhier` makes memory
 geometries benchmarkable from access traces (DESIGN.md §13).
+
+Relationship to :mod:`repro.obs.trace` (DESIGN.md §15): the span
+tracer shares this module's byte-stability contract (virtual clock ⇒
+identical JSONL bytes) but answers a different question — spans are
+the *causal* view of one request (admission → … → placement, with
+durations), this recorder is the *schedulable* view a policy can be
+re-run against. Replayed items are reconstructed without root spans;
+activate a tracer during the replay to trace the replayed run itself.
 """
 from __future__ import annotations
 

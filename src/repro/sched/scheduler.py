@@ -37,6 +37,15 @@ geometry negotiation and each graph's partition search is paid once
 across the fleet: the first worker publishes content-addressed
 artifacts (:mod:`repro.core.artifact`), every later worker warm-starts
 from them with zero candidate sweeps and zero beam searches.
+
+Observability (DESIGN.md §15): each dispatched batch runs under a
+``placement`` span parented to its first member's ``request`` root
+(so a served request yields ONE connected span tree: admission →
+coalesce → placement → dispatch → negotiate/pallas_build), root spans
+are finished at completion with predicted/observed seconds, and the
+registry carries per-tenant ``repro_sched_latency_seconds`` histograms
+(p50/p99 in the snapshot), ``repro_sched_queue_depth``, round/item
+counters, and ``repro_sched_deadline_miss_total``.
 """
 from __future__ import annotations
 
@@ -49,9 +58,34 @@ import jax.numpy as jnp
 
 from repro.core.isa import FusedProgram
 from repro.graph.plan import Plan
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 from .cost import CostModel, Estimate
 from .queue import Batch, RequestQueue, WorkItem, program_of
+
+_ROUNDS = _metrics.REGISTRY.counter(
+    "repro_sched_rounds_total", help="scheduling rounds executed")
+_ITEMS = _metrics.REGISTRY.counter(
+    "repro_sched_items_total", help="work items completed")
+
+_LATENCY_HELP = ("request latency: completion minus arrival, in the "
+                 "scheduler's clock (wall or virtual seconds)")
+
+
+def _latency_hist(tenant: str) -> _metrics.Histogram:
+    """Per-tenant latency histogram (p50/p99 come out of the snapshot's
+    quantile fields — DESIGN.md §15)."""
+    return _metrics.REGISTRY.histogram(
+        "repro_sched_latency_seconds", help=_LATENCY_HELP,
+        labels={"tenant": tenant})
+
+
+def _deadline_miss(tenant: str) -> _metrics.Counter:
+    return _metrics.REGISTRY.counter(
+        "repro_sched_deadline_miss_total",
+        help="completions after their deadline",
+        labels={"tenant": tenant})
 
 
 # ---------------------------------------------------------------------------
@@ -263,7 +297,14 @@ class Scheduler:
     def _estimate(self, item: WorkItem) -> Estimate:
         est = self._estimates.get(item.seq)
         if est is None:
-            est = self.cost.estimate_item(item)
+            # cost pricing can trigger the item's first geometry
+            # negotiation — parent that span under the request root
+            tr = _trace.get_tracer()
+            if tr is not None and item.span is not None:
+                with tr.under(item.span):
+                    est = self.cost.estimate_item(item)
+            else:
+                est = self.cost.estimate_item(item)
             if self.clock == "virtual" and isinstance(item.target, Plan):
                 # a plan's virtual duration is its levels lane-packed
                 # with contention — priced HERE so the recorded submit
@@ -367,17 +408,35 @@ class Scheduler:
         ests = [self._batch_estimate(b) for b in round_batches]
         makespan = self.cost.contended_makespan(ests)
 
+        tr = _trace.ACTIVE
         if self.clock == "virtual":
             observed = [makespan] * len(round_batches)
             results = [[None] * len(b.items) for b in round_batches]
             finishes = [start + makespan] * len(round_batches)
+            if tr is not None:
+                for lane, b in enumerate(round_batches):
+                    with tr.span("placement", parent=b.items[0].span,
+                                 lane=lane, round=self._round,
+                                 batch_seq=b.seq, n_items=len(b.items),
+                                 virtual=True):
+                        pass
         else:
             observed, results, finishes = [], [], []
             done = 0.0
-            for b in round_batches:
+            for lane, b in enumerate(round_batches):
                 t0 = time.perf_counter()
-                out = self._dispatch_batch(b)
-                jax.block_until_ready(out)
+                if tr is not None and b.items[0].span is not None:
+                    # hang the lane's work off the request's root span so
+                    # the dispatch/negotiate children nest under it
+                    with tr.under(b.items[0].span), \
+                            tr.span("placement", lane=lane,
+                                    round=self._round, batch_seq=b.seq,
+                                    n_items=len(b.items)):
+                        out = self._dispatch_batch(b)
+                        jax.block_until_ready(out)
+                else:
+                    out = self._dispatch_batch(b)
+                    jax.block_until_ready(out)
                 dt = time.perf_counter() - t0
                 done += dt
                 observed.append(dt)
@@ -398,6 +457,14 @@ class Scheduler:
                 # with like on coalesced batches
                 it.observed_s = obs / max(1, len(b.items))
                 it.lane, it.start, it.finish = lane, start, fin
+                _ITEMS.inc()
+                _latency_hist(it.tenant).observe(max(fin - it.arrival, 0.0))
+                if it.deadline is not None and fin > it.deadline:
+                    _deadline_miss(it.tenant).inc()
+                if it.span is not None and tr is not None:
+                    tr.finish(it.span, lane=lane, finish=fin,
+                              predicted_s=it.predicted_s,
+                              observed_s=it.observed_s)
                 self.results[it.seq] = out
                 self.placements.append(Placement(
                     seq=it.seq, lane=lane, round=self._round, start=start,
@@ -414,6 +481,7 @@ class Scheduler:
         if self.clock == "virtual":
             self._now = start + makespan
         self._round += 1
+        _ROUNDS.inc()
 
     def _record_submits(self, batches: list[Batch]) -> None:
         for b in batches:

@@ -43,7 +43,7 @@ def cache_dir(tmp_path):
 
 
 def snap():
-    return dataclasses.replace(prog_mod.DISPATCH_STATS)
+    return prog_mod.DISPATCH_STATS.snapshot()
 
 
 def delta(s0, *names):
@@ -343,7 +343,7 @@ _CHILD = textwrap.dedent("""
 
     fused = isa.fuse("c0_scale", "c0_add")
     fused.program.negotiate_geometry(5000, jnp.float32)
-    s = prog_mod.DISPATCH_STATS
+    s = prog_mod.DISPATCH_STATS.snapshot()
     print(json.dumps({f.name: getattr(s, f.name)
                       for f in dataclasses.fields(s)}))
 """)

@@ -140,13 +140,12 @@ class TestWarmDispatch:
         x = jnp.asarray(rng.standard_normal(3000), jnp.float32)
         b = jnp.asarray(rng.standard_normal(3000), jnp.float32)
         first = prog(2.0, x, b, interpret=True)
-        snap = dataclasses.replace(prog_mod.DISPATCH_STATS)
-        second = prog(2.0, x, b, interpret=True)
-        s = prog_mod.DISPATCH_STATS
-        assert s.geometry_misses == snap.geometry_misses
-        assert s.geometry_hits == snap.geometry_hits   # dispatch table hit
-        assert s.kernel_traces == snap.kernel_traces
-        assert s.call_builds == snap.call_builds
+        with prog_mod.dispatch_stats_window() as w:
+            second = prog(2.0, x, b, interpret=True)
+            assert w.delta("geometry_misses") == 0
+            assert w.delta("geometry_hits") == 0   # dispatch table hit
+            assert w.delta("kernel_traces") == 0
+            assert w.delta("call_builds") == 0
         np.testing.assert_allclose(np.asarray(second), np.asarray(first))
 
     def test_new_shape_retraces_once(self, fresh_caches):

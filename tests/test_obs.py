@@ -1,0 +1,610 @@
+"""Unified observability (ISSUE 7, DESIGN.md §15).
+
+Covers :mod:`repro.obs` end to end: tracer parenting/nesting, virtual-
+clock byte-stable JSONL and Chrome-trace exports, the NULL_SPAN off
+path, the metrics registry (exact counter round-trips, le-inclusive
+histogram bucket edges, label escaping, Prometheus text exposition and
+the HTTP endpoint), the registry-backed ``DISPATCH_STATS`` view and its
+test-isolation window, span wiring through queue → scheduler →
+program dispatch (sweep AND disk-hit negotiate outcomes), drift
+record/rank/format plus the cost-model feed, plan-cache GC (entry and
+byte bounds, LRU order, load-touch, keep-newest) and EWMA-correction
+persistence — including a REAL fresh subprocess warm-starting its
+predictions from a parent-populated cache dir.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+import textwrap
+import urllib.request
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401 — registers the ISA
+from repro.core import artifact, isa
+from repro.core import program as prog_mod
+from repro.memhier import TPU_V5E
+from repro.obs import drift as obs_drift
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
+from repro.roofline import dispatch_cache_report
+from repro.sched import CostModel, RequestQueue, Scheduler
+
+F32 = jnp.float32
+
+
+@pytest.fixture
+def tracer():
+    """A fresh active tracer; deactivated afterwards."""
+    t = obs_trace.Tracer()
+    with obs_trace.using_tracer(t):
+        yield t
+
+
+@pytest.fixture
+def cache_dir(tmp_path):
+    prog_mod.clear_dispatch_caches()
+    with artifact.using_plan_cache(tmp_path):
+        yield tmp_path
+    prog_mod.clear_dispatch_caches()
+
+
+def _operands(n=5000):
+    rng = np.random.default_rng(0)
+    return (2.0,
+            jnp.asarray(rng.standard_normal(n), F32),
+            jnp.asarray(rng.standard_normal(n), F32))
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_nesting_parents_and_finish(self):
+        t = obs_trace.Tracer()
+        with t.span("a") as a:
+            assert t.current() is a
+            with t.span("b", k=1) as b:
+                assert b.parent_id == a.span_id
+            assert b.end is not None and b.end >= b.start
+        assert a.parent_id is None
+        assert t.current() is None
+        assert [s.name for s in t.children_of(a)] == ["b"]
+        assert t.subtree_names(a) == ["a", "b"]
+
+    def test_explicit_parent_and_under(self):
+        t = obs_trace.Tracer()
+        root = t.start_span("request", parent=None)
+        with t.span("sibling"):
+            with t.under(root):
+                with t.span("child") as c:
+                    pass
+        assert c.parent_id == root.span_id
+        assert root.end is None          # under() never finishes it
+        t.finish(root, lane=0)
+        assert root.end is not None and root.attrs["lane"] == 0
+
+    def test_exception_marks_span_and_pops_stack(self):
+        t = obs_trace.Tracer()
+        with pytest.raises(RuntimeError):
+            with t.span("outer"):
+                with t.span("boom"):
+                    raise RuntimeError("x")
+        boom = t.named("boom")[0]
+        assert "RuntimeError" in boom.attrs["error"]
+        assert boom.end is not None
+        assert t.current() is None       # stack unwound cleanly
+
+    def test_max_spans_drops_not_grows(self):
+        t = obs_trace.Tracer(max_spans=2)
+        for i in range(5):
+            with t.span(f"s{i}"):
+                pass
+        assert len(t.spans) == 2 and t.dropped == 3
+
+    def test_virtual_clock_deterministic(self):
+        c = obs_trace.VirtualClock()
+        assert (c(), c(), c()) == (0.0, 1e-6, 2e-6)
+
+    def test_jsonl_byte_stable_and_sorted(self):
+        def run():
+            t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+            with t.span("a", z=1, n="x"):
+                with t.span("b"):
+                    pass
+            return t.export_jsonl()
+
+        a, b = run(), run()
+        assert a == b and a
+        lines = a.strip().splitlines()
+        assert [json.loads(ln)["span_id"] for ln in lines] == [1, 2]
+        # sorted keys within each object => byte stability is structural
+        for ln in lines:
+            keys = list(json.loads(ln))
+            assert keys == sorted(keys)
+
+    def test_chrome_export_valid(self):
+        t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+        with t.span("a", lane=2):
+            with t.span("b", arr=np.float32(1.5)):
+                pass
+        doc = json.loads(t.export_chrome())
+        ev = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+        assert len(ev) == 2
+        assert ev[0]["tid"] == 3         # lane+1
+        assert ev[1]["args"]["parent_id"] == 1
+        assert isinstance(ev[1]["args"]["arr"], float)  # jsonable attrs
+
+    def test_null_span_when_off(self):
+        assert obs_trace.get_tracer() is None
+        ctx = obs_trace.span("anything", k=1)
+        assert ctx is obs_trace.NULL_SPAN
+        with ctx as sp:
+            assert sp is None
+
+    def test_module_span_routes_to_active(self, tracer):
+        with obs_trace.span("x") as sp:
+            assert sp is not None
+        assert tracer.named("x")
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_counter_exact_roundtrip(self):
+        r = MetricsRegistry()
+        c = r.counter("t_requests_total", "help text")
+        c.inc()
+        c.inc(4)
+        assert c.value == 5
+        assert r.counter("t_requests_total") is c     # get-or-create
+        text = r.expose_text()
+        assert "# HELP t_requests_total help text" in text
+        assert "# TYPE t_requests_total counter" in text
+        assert "\nt_requests_total 5\n" in text
+        snap = json.loads(r.snapshot_json())
+        fam = snap["t_requests_total"]
+        assert fam["kind"] == "counter"
+        assert fam["series"][0]["value"] == 5
+
+    def test_gauge_set_and_dec(self):
+        r = MetricsRegistry()
+        g = r.gauge("t_depth")
+        g.set(7)
+        g.dec(2)
+        assert g.value == 5
+        assert "# TYPE t_depth gauge" in r.expose_text()
+
+    def test_histogram_bucket_edges_le_inclusive(self):
+        r = MetricsRegistry()
+        h = r.histogram("t_lat", buckets=(0.1, 1.0, 10.0))
+        h.observe(0.1)                   # exactly ON an edge: le=0.1
+        h.observe(0.1000001)             # just past it: le=1.0
+        h.observe(100.0)                 # +Inf overflow bucket
+        assert h.cumulative() == [1, 2, 2, 3]
+        assert h.count == 3
+        assert h.sum == pytest.approx(100.2000001)
+        assert h.quantile(0.50) == 1.0
+        assert h.quantile(0.99) == float("inf")
+        lines = h.sample_lines()
+        assert 't_lat_bucket{le="0.1"} 1' in lines
+        assert 't_lat_bucket{le="+Inf"} 3' in lines
+        assert "t_lat_count 3" in lines
+
+    def test_histogram_empty_quantile_nan(self):
+        h = MetricsRegistry().histogram("t_e", buckets=(1.0,))
+        assert h.count == 0 and h.quantile(0.5) != h.quantile(0.5)  # NaN
+
+    def test_labels_distinct_and_escaped(self):
+        r = MetricsRegistry()
+        r.counter("t_total", labels={"tenant": "a"}).inc()
+        r.counter("t_total", labels={"tenant": "b"}).inc(2)
+        assert r.get("t_total", {"tenant": "b"}).value == 2
+        r.counter("t_esc_total", labels={"v": 'q"\\\n'}).inc()
+        text = r.expose_text()
+        assert 't_total{tenant="a"} 1' in text
+        assert 't_total{tenant="b"} 2' in text
+        assert 't_esc_total{v="q\\"\\\\\\n"} 1' in text
+
+    def test_kind_and_bucket_conflicts_raise(self):
+        r = MetricsRegistry()
+        r.counter("t_x")
+        with pytest.raises(TypeError):
+            r.histogram("t_x")
+        r.histogram("t_h", buckets=(1.0, 2.0))
+        with pytest.raises(ValueError):
+            r.histogram("t_h", buckets=(5.0,))
+
+    def test_exposition_parses(self):
+        """Every non-comment line is `name[{labels}] value`, every
+        family has exactly one HELP and one TYPE line before it."""
+        r = MetricsRegistry()
+        r.counter("t_a_total", "a").inc(3)
+        r.histogram("t_b_seconds", "b", labels={"k": "v"},
+                    buckets=(0.5,)).observe(0.25)
+        r.gauge("t_c", "c").set(-1.5)
+        sample = re.compile(
+            r'^[a-zA-Z_:][a-zA-Z0-9_:]*'
+            r'(\{[a-zA-Z_][a-zA-Z0-9_]*="(\\.|[^"\\])*"'
+            r'(,[a-zA-Z_][a-zA-Z0-9_]*="(\\.|[^"\\])*")*\})? '
+            r'(NaN|[-+]?(Inf|[0-9.eE+-]+))$')
+        seen_meta = set()
+        for ln in r.expose_text().splitlines():
+            if not ln:
+                continue
+            if ln.startswith("#"):
+                kind, name = ln.split()[1:3]
+                seen_meta.add((kind, name))
+                continue
+            assert sample.match(ln), f"unparseable sample line: {ln!r}"
+        for name in ("t_a_total", "t_b_seconds", "t_c"):
+            assert ("HELP", name) in seen_meta
+            assert ("TYPE", name) in seen_meta
+
+    def test_http_endpoint(self):
+        r = MetricsRegistry()
+        r.counter("t_served_total").inc(9)
+        httpd = obs_metrics.start_http_server(0, registry=r)
+        try:
+            host, port = httpd.server_address[:2]
+            base = f"http://{host}:{port}"
+            with urllib.request.urlopen(f"{base}/metrics") as resp:
+                body = resp.read().decode()
+                assert resp.headers["Content-Type"].startswith("text/plain")
+            assert "t_served_total 9" in body
+            with urllib.request.urlopen(f"{base}/metrics.json") as resp:
+                doc = json.loads(resp.read().decode())
+            assert doc["t_served_total"]["series"][0]["value"] == 9
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(f"{base}/other")
+        finally:
+            httpd.shutdown()
+            httpd.server_close()
+
+
+# ---------------------------------------------------------------------------
+# DISPATCH_STATS: registry-backed view + isolation window (satellite c)
+# ---------------------------------------------------------------------------
+
+class TestDispatchStatsView:
+    def test_view_is_registry_backed(self):
+        before = obs_metrics.REGISTRY.counter(
+            "repro_dispatch_geometry_misses_total").value
+        prog_mod.DISPATCH_STATS.geometry_misses += 3
+        after = obs_metrics.REGISTRY.counter(
+            "repro_dispatch_geometry_misses_total").value
+        assert after - before == 3
+        assert prog_mod.DISPATCH_STATS.geometry_misses == after
+
+    def test_snapshot_is_frozen_and_comparable(self):
+        s = prog_mod.DISPATCH_STATS.snapshot()
+        assert isinstance(s, prog_mod.DispatchStats)
+        assert prog_mod.DISPATCH_STATS == s
+        prog_mod.DISPATCH_STATS.disk_hit += 1
+        assert prog_mod.DISPATCH_STATS != s
+        with pytest.raises(AttributeError):
+            prog_mod.DISPATCH_STATS.not_a_counter
+
+    def test_window_isolates_from_ambient_state(self):
+        prog_mod.DISPATCH_STATS.geometry_hits += 7   # ambient noise
+        with prog_mod.dispatch_stats_window() as w:
+            prog_mod.DISPATCH_STATS.geometry_hits += 2
+            prog_mod.DISPATCH_STATS.disk_miss += 1
+            assert w.delta("geometry_hits") == 2
+        d = w.deltas()
+        assert d.geometry_hits == 2 and d.disk_miss == 1
+        assert d.kernel_traces == 0
+
+    def test_reset_zeroes_in_place(self):
+        view = prog_mod.DISPATCH_STATS
+        view.batch_calls += 5
+        prog_mod.reset_dispatch_stats()
+        assert view.batch_calls == 0
+        assert prog_mod.DISPATCH_STATS is view      # no global rebind
+
+
+class TestRooflineReport:
+    def test_dispatch_cache_report_counters_and_rates(self):
+        prog_mod.reset_dispatch_stats()
+        prog_mod.DISPATCH_STATS.geometry_hits += 3
+        prog_mod.DISPATCH_STATS.geometry_misses += 1
+        prog_mod.DISPATCH_STATS.disk_hit += 1
+        prog_mod.DISPATCH_STATS.disk_miss += 1
+        rep = dispatch_cache_report()
+        assert rep["geometry_hits"] == 3
+        assert rep["geometry_misses"] == 1
+        assert rep["geometry_hit_rate"] == pytest.approx(0.75)
+        assert rep["disk_hit_rate"] == pytest.approx(0.5)
+        json.dumps(rep)                              # JSON-able
+
+
+# ---------------------------------------------------------------------------
+# Span wiring: queue -> scheduler -> program dispatch
+# ---------------------------------------------------------------------------
+
+class TestSpanWiring:
+    def test_submit_emits_request_and_admission(self, tracer):
+        fused = isa.fuse("c0_scale", "c0_add")
+        q = RequestQueue()
+        it = q.submit(fused, _operands(), tenant="t0", arrival=0.0)
+        (root,) = tracer.named("request")
+        assert it.span is root and root.end is None
+        assert root.attrs["tenant"] == "t0"
+        (adm,) = tracer.named("admission")
+        assert adm.parent_id == root.span_id and adm.end is not None
+        assert "c0_scale" in adm.attrs["coalesce_key"]
+
+    def test_wall_run_builds_one_connected_tree(self, tracer):
+        prog_mod.clear_dispatch_caches()
+        fused = isa.fuse("c0_scale", "c0_add")
+        q = RequestQueue()
+        q.submit(fused, _operands(), tenant="t0", arrival=0.0)
+        with artifact.using_plan_cache(None):
+            Scheduler(q, cost=CostModel(hierarchy=TPU_V5E), policy="fifo",
+                      n_lanes=1, clock="wall", mode="interpret").drain()
+        (root,) = [s for s in tracer.spans if s.parent_id is None]
+        names = tracer.subtree_names(root)
+        for want in ("request", "admission", "coalesce", "placement",
+                     "dispatch", "negotiate", "pallas_build"):
+            assert want in names, f"{want} missing from {names}"
+        assert len(names) == len(tracer.spans)       # fully connected
+        assert all(s.end is not None for s in tracer.spans)
+        assert root.attrs["observed_s"] > 0
+        assert root.attrs["lane"] == 0
+        # cost pricing and dispatch may each negotiate (distinct memory
+        # models => distinct geometry keys); all are cold sweeps here
+        negs = tracer.named("negotiate")
+        assert negs
+        assert all(s.attrs["outcome"] == "sweep" for s in negs)
+        assert re.fullmatch(r"[0-9a-f]{12,}", negs[0].attrs["fingerprint"])
+
+    def test_negotiate_outcome_disk_hit(self, cache_dir, tracer):
+        fused = isa.fuse("c0_scale", "c0_add")
+        fused.program.negotiate_geometry(5000, F32)   # publish
+        prog_mod.clear_dispatch_caches()
+        isa.fuse("c0_scale", "c0_add").program.negotiate_geometry(5000, F32)
+        outcomes = [s.attrs["outcome"] for s in tracer.named("negotiate")]
+        assert outcomes[-1] == "disk_hit"
+
+    def test_coalesced_batch_single_span_per_dispatch(self, tracer):
+        fused = isa.fuse("c0_scale", "c0_add")
+        ops_ = _operands(2048)
+        q = RequestQueue()
+        for _ in range(4):
+            q.submit(fused, ops_, tenant="t0", arrival=0.0)
+        Scheduler(q, policy="fifo", n_lanes=1, clock="wall",
+                  mode="interpret").drain()
+        (co,) = tracer.named("coalesce")
+        assert co.attrs["n_items"] == 4 and co.attrs["coalesced"]
+        dispatches = tracer.named("dispatch")
+        assert len(dispatches) == 1                  # one stacked launch
+        assert dispatches[0].attrs["n_items"] == 4
+        assert len(tracer.named("request")) == 4     # all roots finished
+        assert all(s.end is not None for s in tracer.named("request"))
+
+    def test_no_tracer_no_spans_no_crash(self):
+        assert obs_trace.get_tracer() is None
+        fused = isa.fuse("c0_scale", "c0_add")
+        q = RequestQueue()
+        it = q.submit(fused, _operands(), arrival=0.0)
+        assert it.span is None
+        Scheduler(q, policy="fifo", n_lanes=1, clock="wall",
+                  mode="interpret").drain()
+
+
+# ---------------------------------------------------------------------------
+# Drift
+# ---------------------------------------------------------------------------
+
+class TestDrift:
+    def test_record_rank_and_format(self):
+        tr = obs_drift.DriftTracker()
+        assert tr.record("k1", 1e-3, 3e-3, name="worst") == 3.0
+        tr.record("k1", 1e-3, 3e-3)
+        tr.record("k2", 1e-3, 1.2e-3, name="mild")
+        tr.record("k3", 0.0, 1.0) is None            # unusable pair
+        rep = tr.report()
+        assert [r["name"] for r in rep] == ["worst", "mild"]
+        assert rep[0]["drift"] == pytest.approx(2.0)
+        assert rep[0]["samples"] == 2
+        assert rep[1]["mean_ratio"] == pytest.approx(1.2)
+        assert tr.report(min_samples=2) == rep[:1]
+        text = tr.format_report()
+        assert "worst" in text and "obs/model" in text
+        assert rep[0]["fingerprint"] in text
+
+    def test_cell_overflow_counted(self):
+        tr = obs_drift.DriftTracker(max_cells=1)
+        tr.record("a", 1.0, 1.0)
+        assert tr.record("b", 1.0, 1.0) is None
+        assert tr.overflow == 1 and len(tr) == 1
+
+    def test_cost_model_feeds_drift(self):
+        cost = CostModel(hierarchy=TPU_V5E)
+        fused = isa.fuse("c0_scale", "c0_add")
+        est = cost.estimate(fused, n_elems=5000, dtype=F32)
+        for _ in range(3):
+            cost.observe(fused, n_elems=5000, dtype=F32,
+                         seconds=2.0 * est.modeled_s)
+        (cell,) = cost.drift_report(min_samples=1)
+        assert cell["samples"] == 3
+        assert cell["drift"] == pytest.approx(1.0)
+        assert cell["name"] == "c0_scale+c0_add"
+        assert cell["ewma_ratio"] == pytest.approx(2.0)
+
+    def test_watch_programs_bare_calls(self):
+        tr = obs_drift.DriftTracker()
+        fused = isa.fuse("c0_scale", "c0_add")
+        with obs_drift.watch_programs(tr):
+            fused(*_operands(), mode="interpret")
+        (cell,) = tr.report(min_samples=1)
+        assert cell["samples"] == 1 and cell["mean_ratio"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache GC (satellite a)
+# ---------------------------------------------------------------------------
+
+class TestPlanCacheGC:
+    def _fill(self, cache, keys, t0):
+        for i, k in enumerate(keys):
+            assert cache.store("geom", k, {"i": i})
+            os.utime(cache.entry_path("geom", k), (t0 + i, t0 + i))
+
+    def test_entry_bound_evicts_oldest(self, tmp_path):
+        cache = artifact.PlanCache(tmp_path, max_entries=3)
+        e0 = prog_mod.DISPATCH_STATS.disk_evict
+        self._fill(cache, ["a", "b", "c"], 1_000_000.0)
+        assert len(list(tmp_path.glob("*.json"))) == 3
+        cache.store("geom", "d", {"i": 3})            # 4th: sweep on store
+        left = {p.name for p in tmp_path.glob("*.json")}
+        assert len(left) == 3
+        assert os.path.basename(cache.entry_path("geom", "a")) not in left
+        assert os.path.basename(cache.entry_path("geom", "d")) in left
+        assert prog_mod.DISPATCH_STATS.disk_evict - e0 == 1
+
+    def test_byte_bound(self, tmp_path):
+        cache = artifact.PlanCache(tmp_path, max_bytes=1)
+        cache.store("geom", "a", {"i": 0})
+        os.utime(cache.entry_path("geom", "a"), (1_000_000.0,) * 2)
+        cache.store("geom", "b", {"i": 1})            # over: sweep
+        left = [p.name for p in tmp_path.glob("*.json")]
+        # the just-published entry is never evicted, everything else is
+        assert left == [os.path.basename(cache.entry_path("geom", "b"))]
+
+    def test_load_touches_mtime_lru(self, tmp_path):
+        cache = artifact.PlanCache(tmp_path, max_entries=3)
+        self._fill(cache, ["a", "b", "c"], 1_000_000.0)
+        assert cache.load("geom", "a") == {"i": 0}    # touch: now newest
+        cache.store("geom", "d", {"i": 3})
+        left = {p.name for p in tmp_path.glob("*.json")}
+        assert os.path.basename(cache.entry_path("geom", "a")) in left
+        assert os.path.basename(cache.entry_path("geom", "b")) not in left
+
+    def test_sweep_never_evicts_published(self, tmp_path):
+        unbounded = artifact.PlanCache(tmp_path)
+        unbounded.store("geom", "a", {"i": 0})
+        unbounded.store("geom", "b", {"i": 1})
+        keep = unbounded.entry_path("geom", "b")
+        # make the entry to protect the OLDEST on disk, then sweep a
+        # bounded view around it: "a" goes, the published one survives
+        os.utime(keep, (1.0, 1.0))
+        bounded = artifact.PlanCache(tmp_path, max_entries=1)
+        assert bounded._sweep(keep=keep) == 1
+        assert os.path.exists(keep)
+        assert not os.path.exists(unbounded.entry_path("geom", "a"))
+
+    def test_unbounded_never_sweeps(self, tmp_path):
+        cache = artifact.PlanCache(tmp_path)
+        for k in "abcdefgh":
+            cache.store("geom", k, {})
+        assert len(list(tmp_path.glob("*.json"))) == 8
+        assert cache._sweep() == 0
+
+    def test_env_bounds(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(artifact.ENV_MAX_ENTRIES, "2")
+        monkeypatch.setenv(artifact.ENV_MAX_BYTES, "12345")
+        cache = artifact.PlanCache(tmp_path)
+        assert cache.max_entries == 2 and cache.max_bytes == 12345
+        monkeypatch.setenv(artifact.ENV_MAX_ENTRIES, "junk")
+        assert artifact.PlanCache(tmp_path).max_entries is None
+        assert artifact.PlanCache(tmp_path, max_entries=7).max_entries == 7
+
+
+# ---------------------------------------------------------------------------
+# EWMA persistence (satellite b, kind="ewma")
+# ---------------------------------------------------------------------------
+
+_EWMA_CHILD = textwrap.dedent("""
+    import json
+    import jax.numpy as jnp
+    import repro.kernels
+    from repro.core import isa
+    from repro.memhier import TPU_V5E
+    from repro.sched import CostModel
+
+    fused = isa.fuse("c0_scale", "c0_add")
+    cost = CostModel(hierarchy=TPU_V5E)
+    est = cost.estimate(fused, n_elems=5000, dtype=jnp.float32)
+    print(json.dumps({"correction": est.correction}))
+""")
+
+
+class TestEwmaPersistence:
+    def _train(self, ratio=2.0):
+        cost = CostModel(hierarchy=TPU_V5E)
+        fused = isa.fuse("c0_scale", "c0_add")
+        est = cost.estimate(fused, n_elems=5000, dtype=F32)
+        for _ in range(2):               # 2nd observation replaces the 1st
+            cost.observe(fused, n_elems=5000, dtype=F32,
+                         seconds=ratio * est.modeled_s)
+        return cost, fused, est
+
+    def test_roundtrip_in_process(self, cache_dir):
+        cost, fused, est = self._train(ratio=2.0)
+        assert any(p.name.startswith("ewma-")
+                   for p in cache_dir.iterdir()), "no ewma artifact"
+        fresh = CostModel(hierarchy=TPU_V5E)
+        e2 = fresh.estimate(fused, n_elems=5000, dtype=F32)
+        assert e2.correction == pytest.approx(2.0)
+        assert e2.seconds == pytest.approx(2.0 * est.modeled_s)
+        # ...and the observation count rode along: the next observe
+        # blends instead of replacing (count > 1 on the warmed key)
+        key = fresh.ewma_key(fused, 5000, F32)
+        assert fresh._count.get(key, 0) >= 2
+
+    def test_one_disk_probe_per_key(self, cache_dir):
+        cost, fused, _ = self._train()
+        fresh = CostModel(hierarchy=TPU_V5E)
+        fresh.estimate(fused, n_elems=5000, dtype=F32)
+        with prog_mod.dispatch_stats_window() as w:
+            fresh.estimate(fused, n_elems=5000, dtype=F32)
+            fresh.estimate(fused, n_elems=5000, dtype=F32)
+        assert w.delta("disk_hit") == 0 and w.delta("disk_miss") == 0
+
+    def test_malformed_payload_ignored(self, cache_dir):
+        cost = CostModel(hierarchy=TPU_V5E)
+        fused = isa.fuse("c0_scale", "c0_add")
+        key = cost.ewma_key(fused, 5000, F32)
+        cache = artifact.plan_cache()
+        for bad in ({"ratio": -2.0, "abs": None, "count": 1},
+                    {"ratio": float("nan"), "abs": None, "count": 1},
+                    {"ratio": True, "abs": None, "count": 1},
+                    {"ratio": None, "abs": None, "count": "many"},
+                    "not even a dict"):
+            cache.store("ewma", key, bad)
+            fresh = CostModel(hierarchy=TPU_V5E)
+            est = fresh.estimate(fused, n_elems=5000, dtype=F32)
+            assert est.correction == 1.0, f"accepted {bad!r}"
+
+    def test_no_cache_no_persistence(self):
+        with artifact.using_plan_cache(None):
+            cost, fused, _ = self._train()
+            fresh = CostModel(hierarchy=TPU_V5E)
+            est = fresh.estimate(fused, n_elems=5000, dtype=F32)
+            assert est.correction == 1.0
+
+    def test_subprocess_warm_starts_predictions(self, cache_dir):
+        self._train(ratio=3.0)
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        src = os.path.join(root, "src")
+        env = dict(os.environ)
+        env[artifact.ENV_VAR] = str(cache_dir)
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                             if env.get("PYTHONPATH") else src)
+        proc = subprocess.run([sys.executable, "-c", _EWMA_CHILD],
+                              capture_output=True, text=True, env=env,
+                              timeout=300)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        out = json.loads(proc.stdout.splitlines()[-1])
+        assert out["correction"] == pytest.approx(3.0), (
+            "fresh process did not warm-start its EWMA correction")

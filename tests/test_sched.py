@@ -151,12 +151,12 @@ class TestCallBatch:
     def test_counters_and_single_item_passthrough(self, fresh_caches):
         prog = isa.fuse("c0_scale", "c0_add").program
         x, b = vecs(0, 1)
-        s = dataclasses.replace(prog_mod.DISPATCH_STATS)
-        prog.call_batch([(2.0, x, b)], interpret=True)
-        assert prog_mod.DISPATCH_STATS.batch_calls == s.batch_calls
-        prog.call_batch([(2.0, x, b), (2.0, b, x)], interpret=True)
-        assert prog_mod.DISPATCH_STATS.batch_calls == s.batch_calls + 1
-        assert prog_mod.DISPATCH_STATS.batch_items == s.batch_items + 2
+        with prog_mod.dispatch_stats_window() as w:
+            prog.call_batch([(2.0, x, b)], interpret=True)
+            assert w.delta("batch_calls") == 0
+            prog.call_batch([(2.0, x, b), (2.0, b, x)], interpret=True)
+            assert w.delta("batch_calls") == 1
+            assert w.delta("batch_items") == 2
 
     def test_mismatched_scalars_rejected(self, fresh_caches):
         prog = isa.fuse("c0_scale", "c0_add").program
@@ -215,37 +215,37 @@ class TestRebucketing:
         prog = self.mk()
         br, bc = prog._resolve_geometry(65536, jnp.float32)
         assert bc == 8192                      # widest block, zero padding
-        s = dataclasses.replace(prog_mod.DISPATCH_STATS)
-        br2, bc2 = prog._resolve_geometry(32769, jnp.float32)
-        assert bc2 < bc                        # re-negotiated narrower
-        assert prog_mod.DISPATCH_STATS.rebucketed == s.rebucketed + 1
+        with prog_mod.dispatch_stats_window() as w:
+            br2, bc2 = prog._resolve_geometry(32769, jnp.float32)
+            assert bc2 < bc                    # re-negotiated narrower
+            assert w.delta("rebucketed") == 1
 
     def test_repeat_size_stays_warm_after_rebucket(self, fresh_caches):
         prog = self.mk()
         prog._resolve_geometry(65536, jnp.float32)
         prog._resolve_geometry(32769, jnp.float32)
-        s = dataclasses.replace(prog_mod.DISPATCH_STATS)
-        prog._resolve_geometry(32769, jnp.float32)
-        assert prog_mod.DISPATCH_STATS.geometry_misses == s.geometry_misses
-        assert prog_mod.DISPATCH_STATS.rebucketed == s.rebucketed
+        with prog_mod.dispatch_stats_window() as w:
+            prog._resolve_geometry(32769, jnp.float32)
+            assert w.delta("geometry_misses") == 0
+            assert w.delta("rebucketed") == 0
 
     def test_same_size_never_checks(self, fresh_caches):
         prog = self.mk()
         prog._resolve_geometry(65536, jnp.float32)
-        s = dataclasses.replace(prog_mod.DISPATCH_STATS)
-        for _ in range(3):
-            prog._resolve_geometry(65536, jnp.float32)
-        assert prog_mod.DISPATCH_STATS == s
+        with prog_mod.dispatch_stats_window() as w:
+            for _ in range(3):
+                prog._resolve_geometry(65536, jnp.float32)
+            assert w.deltas() == prog_mod.DispatchStats()
 
     def test_undrifted_size_marks_checked_once(self, fresh_caches):
         prog = self.mk()
         prog._resolve_geometry(65536, jnp.float32)
         # 65024 pads to the same single wide block: within the band
-        s = dataclasses.replace(prog_mod.DISPATCH_STATS)
-        prog._resolve_geometry(65024, jnp.float32)
-        prog._resolve_geometry(65024, jnp.float32)
-        assert prog_mod.DISPATCH_STATS.rebucketed == s.rebucketed
-        assert prog_mod.DISPATCH_STATS.geometry_misses == s.geometry_misses
+        with prog_mod.dispatch_stats_window() as w:
+            prog._resolve_geometry(65024, jnp.float32)
+            prog._resolve_geometry(65024, jnp.float32)
+            assert w.delta("rebucketed") == 0
+            assert w.delta("geometry_misses") == 0
 
 
 # ---------------------------------------------------------------------------
