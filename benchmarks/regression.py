@@ -41,7 +41,8 @@ import sys
 # if the two constants drifted, sampled rows would silently stop gating.
 from .common import MIN_SAMPLES, median as _median
 
-DEFAULT_PATTERNS = ("predicted", "modeled", "overlap", "best_hand")
+DEFAULT_PATTERNS = ("predicted", "modeled", "overlap", "best_hand",
+                    "makespan")
 
 
 def load_rows(path: str, required: bool = False) -> dict[str, dict]:

@@ -84,6 +84,16 @@ def main(argv=None):
                    help="activate the span tracer and write the run's "
                         "Chrome-trace JSON to PATH (open in Perfetto / "
                         "chrome://tracing)")
+    p.add_argument("--region-slots", type=int, default=None, metavar="N",
+                   help="with --sched: bound each lane to N configured-"
+                        "region slots (repro.regions, DESIGN.md §16); "
+                        "non-resident placements charge a measured "
+                        "reconfiguration penalty. 0 tracks residency "
+                        "without bounding; omit to disable regions")
+    p.add_argument("--region-policy", default="lru",
+                   choices=("lru", "reuse"),
+                   help="residency eviction policy with --region-slots: "
+                        "lru baseline or EWMA predicted-reuse")
     args = p.parse_args(argv)
 
     if args.plan_cache:
@@ -182,7 +192,9 @@ def _decode_scheduled(args, decode, sample_fn, params, cache, tok, rng,
     cost = CostModel()
     recorder = TraceRecorder() if args.sched_trace else None
     sched = Scheduler(queue, cost=cost, policy=args.sched_policy,
-                      n_lanes=1, clock="wall", recorder=recorder)
+                      n_lanes=1, clock="wall", recorder=recorder,
+                      region_slots=args.region_slots,
+                      region_policy=args.region_policy)
 
     state = {"cache": cache, "tok": tok, "rng": rng}
 
@@ -215,6 +227,14 @@ def _decode_scheduled(args, decode, sample_fn, params, cache, tok, rng,
               f"median step {obs[len(obs)//2]*1e3:.1f} ms, "
               f"EWMA prediction error (2nd half) "
               f"{err[len(err)//2]*100:.0f}%")
+    if sched.regions is not None:
+        r = sched.regions.report()
+        lane0 = r["lanes"][0]
+        print(f"regions[{r['policy']}]: {r['slots'] or 'unbounded'} "
+              f"slots/lane, lane0 hit ratio {lane0['hit_ratio']:.2f} "
+              f"({lane0['hits']} hits / {lane0['loads']} loads / "
+              f"{lane0['evictions']} evictions), "
+              f"{r['swap_seconds']*1e3:.2f} ms charged to reconfig")
     if recorder is not None:
         recorder.dump(args.sched_trace)
         print(f"sched trace ({len(recorder.events)} events) -> "

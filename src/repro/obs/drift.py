@@ -88,12 +88,28 @@ class DriftTracker:
 
     ``max_cells`` bounds memory for long-lived fleets: once full, new
     keys are counted in :attr:`overflow` instead of allocating.
+
+    ``threshold`` makes chronic mismatch *queryable* instead of only
+    ranked: each recorded sample whose cell (≥ 2 samples, so one
+    outlier can't trip it) is drifting past the threshold bumps the
+    process-global ``repro_drift_exceeded_total`` counter, and
+    :meth:`exceeding` lists the offending cells — the hook for alerting
+    and for re-negotiation triggers (ROADMAP: drift → re-calibration).
     """
 
-    def __init__(self, max_cells: int = 4096):
+    def __init__(self, max_cells: int = 4096,
+                 threshold: Optional[float] = None):
+        if threshold is not None and threshold <= 0:
+            raise ValueError(f"threshold must be > 0, got {threshold}")
         self.max_cells = max_cells
+        self.threshold = threshold
         self._cells: Dict[Any, DriftCell] = {}
         self.overflow = 0
+        from repro.obs import metrics as _metrics
+        self._m_exceeded = _metrics.REGISTRY.counter(
+            "repro_drift_exceeded_total",
+            help="samples recorded into cells whose |obs/model - 1| "
+                 "exceeds the tracker's threshold")
 
     def record(self, key: Any, modeled_s: float, observed_s: float, *,
                name: str = "", bucket: Optional[int] = None,
@@ -112,7 +128,22 @@ class DriftTracker:
             self._cells[key] = cell
         ratio = observed_s / modeled_s
         cell.record(ratio, ewma_ratio)
+        if (self.threshold is not None and cell.n >= 2
+                and cell.drift > self.threshold):
+            self._m_exceeded.inc()
         return ratio
+
+    def exceeding(self, threshold: Optional[float] = None,
+                  min_samples: int = 2) -> List[dict]:
+        """Cells whose drift exceeds ``threshold`` (defaults to the
+        tracker's own), worst-first — empty list means the model is
+        within tolerance everywhere it has been measured."""
+        thr = threshold if threshold is not None else self.threshold
+        if thr is None:
+            raise ValueError("no threshold: pass one or construct the "
+                             "tracker with DriftTracker(threshold=...)")
+        return [r for r in self.report(min_samples=min_samples)
+                if r["drift"] > thr]
 
     def __len__(self):
         return len(self._cells)

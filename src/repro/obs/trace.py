@@ -37,16 +37,18 @@ class Span:
     """One timed operation.  ``attrs`` is a plain dict the owning site
     may mutate until :meth:`Tracer.finish`."""
 
-    __slots__ = ("name", "span_id", "parent_id", "start", "end", "attrs")
+    __slots__ = ("name", "span_id", "parent_id", "start", "end", "attrs",
+                 "sampled")
 
     def __init__(self, name: str, span_id: int, parent_id: Optional[int],
-                 start: float, attrs: Dict[str, Any]):
+                 start: float, attrs: Dict[str, Any], sampled: bool = True):
         self.name = name
         self.span_id = span_id
         self.parent_id = parent_id
         self.start = start
         self.end: Optional[float] = None
         self.attrs = attrs
+        self.sampled = sampled
 
     def to_dict(self) -> dict:
         return {
@@ -149,15 +151,34 @@ class Tracer:
     :class:`VirtualClock` for byte-stable exports.  Span ids are
     sequential from 1 in creation order.  ``max_spans`` bounds memory;
     overflow increments :attr:`dropped` instead of growing.
+
+    ``sample_rate`` enables head-based per-request sampling so tracing
+    can stay on under sustained traffic: the keep/drop decision is made
+    once per ROOT span (a request) and inherited by every descendant,
+    so kept requests keep their *whole* span tree — unlike ``max_spans``
+    overflow, which truncates the tail of the run.  The decision is a
+    deterministic credit accumulator (no RNG): at rate ``r`` exactly
+    every ``1/r``-th root is kept, starting with the first, so tests
+    and replays see stable output.  Unsampled spans are never stored
+    (they cost one branch + counter); :attr:`unsampled` counts them.
     """
 
-    def __init__(self, clock=None, max_spans: int = 1_000_000):
+    def __init__(self, clock=None, max_spans: int = 1_000_000,
+                 sample_rate: float = 1.0):
+        if not (0.0 <= sample_rate <= 1.0):
+            raise ValueError(f"sample_rate must be in [0, 1], got "
+                             f"{sample_rate}")
         self.clock = clock or time.perf_counter
         self.max_spans = max_spans
+        self.sample_rate = float(sample_rate)
         self.spans: List[Span] = []
         self.dropped = 0
+        self.unsampled = 0
         self._stack: List[Span] = []
         self._next_id = 1
+        # first root always sampled (when rate > 0): start one credit
+        # short of the keep threshold
+        self._credit = 1.0 - self.sample_rate
 
     # -- recording ---------------------------------------------------
     def current(self) -> Optional[Span]:
@@ -169,7 +190,13 @@ class Tracer:
         :class:`Span` for an explicit parent."""
         if parent is _CURRENT:
             parent = self.current()
-        pid = parent.span_id if isinstance(parent, Span) else None
+        if isinstance(parent, Span):
+            pid, sampled = parent.span_id, parent.sampled
+        else:
+            pid, sampled = None, self._sample_root()
+        if not sampled:
+            self.unsampled += 1
+            return Span(name, 0, pid, self.clock(), attrs, sampled=False)
         sp = Span(name, self._next_id, pid, self.clock(), attrs)
         self._next_id += 1
         if len(self.spans) < self.max_spans:
@@ -177,6 +204,18 @@ class Tracer:
         else:
             self.dropped += 1
         return sp
+
+    def _sample_root(self) -> bool:
+        """Head-based keep/drop for a new root (see class docstring)."""
+        if self.sample_rate >= 1.0:
+            return True
+        if self.sample_rate <= 0.0:
+            return False
+        self._credit += self.sample_rate
+        if self._credit >= 1.0 - 1e-12:
+            self._credit -= 1.0
+            return True
+        return False
 
     def finish(self, span: Span, **attrs):
         if attrs:
@@ -245,6 +284,76 @@ class Tracer:
             })
         return json.dumps({"traceEvents": events,
                            "displayTimeUnit": "ms"}, sort_keys=True)
+
+    def export_otlp_json(self, service_name: str = "repro",
+                         scope_name: str = "repro.obs") -> str:
+        """OTLP/JSON (OpenTelemetry ``ExportTraceServiceRequest`` shape):
+        one resourceSpans → scopeSpans → spans list, ready to POST to an
+        OTLP/HTTP collector's ``/v1/traces`` or load into any OTel
+        tooling.
+
+        The span model maps directly: each root span starts a *trace*,
+        so every span's ``traceId`` is its root ancestor's id (zero-pad
+        hex, 16 bytes), ``spanId``/``parentSpanId`` are the internal
+        sequential ids (8 bytes), timestamps become unix-epoch
+        nanosecond strings (the clock's zero is the epoch — wall spans
+        are relative to process start, virtual spans to t=0), and attrs
+        become typed OTLP attribute values.  Byte-stable under a
+        :class:`VirtualClock`, like the other exports.
+        """
+        roots: Dict[int, int] = {}
+        by_id = {s.span_id: s for s in self.spans}
+        for s in sorted(self.spans, key=lambda s: s.span_id):
+            p = by_id.get(s.parent_id) if s.parent_id is not None else None
+            roots[s.span_id] = (roots[p.span_id] if p is not None
+                                else s.span_id)
+        out = []
+        for s in sorted(self.spans, key=lambda s: s.span_id):
+            end = s.end if s.end is not None else s.start
+            attrs = [{"key": k, "value": _otlp_value(v)}
+                     for k, v in sorted(s.attrs.items())]
+            out.append({
+                "traceId": f"{roots[s.span_id]:032x}",
+                "spanId": f"{s.span_id:016x}",
+                "parentSpanId": ("" if s.parent_id is None
+                                 else f"{s.parent_id:016x}"),
+                "name": s.name,
+                "kind": 1,  # SPAN_KIND_INTERNAL
+                "startTimeUnixNano": str(int(round(s.start * 1e9))),
+                "endTimeUnixNano": str(int(round(end * 1e9))),
+                "attributes": attrs,
+            })
+        doc = {"resourceSpans": [{
+            "resource": {"attributes": [{
+                "key": "service.name",
+                "value": {"stringValue": service_name},
+            }]},
+            "scopeSpans": [{
+                "scope": {"name": scope_name},
+                "spans": out,
+            }],
+        }]}
+        return json.dumps(doc, sort_keys=True, separators=(",", ":"))
+
+
+def _otlp_value(v) -> dict:
+    """One attr as an OTLP ``AnyValue``: typed when the type maps
+    (bool/int must be tested in that order — bool is an int subclass),
+    everything else through :func:`_chromable` then stringified."""
+    if isinstance(v, bool):
+        return {"boolValue": v}
+    if isinstance(v, int):
+        return {"intValue": str(v)}  # OTLP int64s ride as strings
+    if isinstance(v, float):
+        return {"doubleValue": v}
+    if isinstance(v, str):
+        return {"stringValue": v}
+    if isinstance(v, (list, tuple)):
+        return {"arrayValue": {"values": [_otlp_value(x) for x in v]}}
+    c = _chromable(v)
+    if type(c) is not type(v):
+        return _otlp_value(c)
+    return {"stringValue": repr(v)}  # pragma: no cover - defensive
 
 
 def _chromable(v):

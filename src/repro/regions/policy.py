@@ -1,0 +1,89 @@
+"""Pluggable residency (eviction) policies for the region file.
+
+A policy answers one question: *which resident region should leave a
+full lane to admit a new one?*  It sees the lane's slot states (per-key
+:class:`~repro.regions.residency.SlotState`), the reconfiguration cost
+model, and the shared per-tenant arrival history, and returns the
+victim key.  Policies are pure choosers — the :class:`RegionFile` owns
+all mutation, event emission, and metrics.
+
+Two policies ship (DESIGN.md §16 policy table):
+
+``lru``
+    Evict the least-recently-used resident.  The classic baseline; blind
+    to both reload cost and arrival patterns, so a periodic hot tenant
+    interleaved with a scan of one-shot programs thrashes.
+
+``reuse``
+    Predicted-reuse (cost-aware Belady approximation).  Each resident's
+    *keep value* is ``load_cost / time_until_predicted_next_use``: cheap
+    regions and far-future (or never-predicted) reuses are cheap to
+    evict; expensive regions about to be re-requested are kept.  The
+    next-use prediction comes from the EWMA per-(region, tenant)
+    inter-arrival history the scheduler feeds on every admission —
+    the same signal family as the cost model's EWMA corrections.
+    Regions with *no* arrival history (seen once, never again) predict
+    "never" and are evicted first, making the policy scan-resistant.
+
+Determinism: every comparison tie-breaks on ``(last_used, loaded_at,
+repr(key))``, so victim choice — and therefore the whole event trace —
+is reproducible for a given workload.
+"""
+from __future__ import annotations
+
+
+class LruResidency:
+    """Evict the least-recently-used resident region."""
+
+    name = "lru"
+
+    def choose_victim(self, slots, cost, history, now):
+        return min(
+            slots,
+            key=lambda k: (slots[k].last_used, slots[k].loaded_at, repr(k)),
+        )
+
+
+class PredictedReuseResidency:
+    """Evict the region with the least cost-weighted predicted reuse.
+
+    keep_value(k) = load_cost(k) / max(predicted_next_use(k) − frontier,
+    eps), where *frontier* is the latest arrival the history has seen —
+    predictions live in arrival-time space, not the (possibly far
+    ahead) virtual service clock.  predicted "never" ⇒ keep_value 0.
+    """
+
+    name = "reuse"
+
+    EPS = 1e-9
+
+    def choose_victim(self, slots, cost, history, now):
+        frontier = history.frontier if history is not None else now
+
+        def keep_value(k):
+            nxt = (history.predict_next(k) if history is not None
+                   else float("inf"))
+            if nxt == float("inf"):
+                return 0.0
+            return cost.cost(k) / max(nxt - frontier, self.EPS)
+
+        return min(
+            slots,
+            key=lambda k: (keep_value(k), slots[k].last_used,
+                           slots[k].loaded_at, repr(k)),
+        )
+
+
+RESIDENCY_POLICIES = {
+    "lru": LruResidency,
+    "reuse": PredictedReuseResidency,
+}
+
+
+def make_policy(name: str):
+    try:
+        return RESIDENCY_POLICIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown residency policy {name!r}; "
+            f"choose from {sorted(RESIDENCY_POLICIES)}") from None

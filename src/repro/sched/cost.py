@@ -113,7 +113,8 @@ class CostModel:
     """Predict-then-correct cost model over the repo's memory models."""
 
     def __init__(self, hierarchy=None, alpha: float = 0.25,
-                 default_s: float = 1e-3):
+                 default_s: float = 1e-3,
+                 drift_threshold: Optional[float] = None):
         if not (0.0 < alpha <= 1.0):
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
         self.hierarchy = hierarchy
@@ -127,8 +128,11 @@ class CostModel:
         # miss) — one disk probe per key per process, never on the
         # warm path.
         self._ewma_checked: set = set()
-        #: raw modeled-vs-observed residuals (repro.obs.drift)
-        self.drift = DriftTracker()
+        #: raw modeled-vs-observed residuals (repro.obs.drift); with
+        #: ``drift_threshold``, chronic mismatch past it bumps the
+        #: repro_drift_exceeded_total counter and is listed by
+        #: ``self.drift.exceeding()``
+        self.drift = DriftTracker(threshold=drift_threshold)
 
     # -- keys -----------------------------------------------------------------
     def ewma_key(self, target, n_elems: Optional[int], dtype,

@@ -112,6 +112,9 @@ class WorkItem:
     mode: Optional[str] = None           # dispatch-mode override
     cost_key: Optional[tuple] = None     # explicit EWMA key (callables)
     key: Optional[tuple] = None          # coalesce key (None = singleton)
+    # configured-region identity (repro.regions); lazily filled by the
+    # scheduler via region_key_of, preset by replay() from the trace.
+    region_key: Optional[tuple] = None
     # filled by the scheduler:
     result: Any = None
     predicted_s: Optional[float] = None

@@ -4,10 +4,14 @@ A :class:`TraceRecorder` attached to a :class:`~repro.sched.scheduler.
 Scheduler` logs one JSON object per line (JSONL, sorted keys — so a
 trace is byte-stable and diffs cleanly):
 
-  * ``config`` — policy name, lane count, clock;
+  * ``config`` — policy name, lane count, clock (+ ``region_slots`` /
+    ``region_policy`` when region residency is enabled);
   * ``submit`` — per item: seq, arrival, deadline, tenant, weight,
     coalesce key (stringified), and the cost model's estimate at
-    admission (predicted / modeled / DRAM busy seconds, DRAM bytes);
+    admission (predicted / modeled / DRAM busy seconds, DRAM bytes;
+    + stringified region key and pinned reconfig cost under regions);
+  * ``region`` — per residency transition: op (hit / evict / load),
+    lane, stringified region key, charged swap seconds, round;
   * ``place``  — per item: lane, round, start/finish, predicted vs
     observed seconds, coalescing flag.
 
@@ -32,6 +36,8 @@ from __future__ import annotations
 
 import json
 from typing import Optional, Sequence
+
+from repro.regions import PinnedReconfigCost
 
 from .cost import CostModel, Estimate
 from .queue import RequestQueue, WorkItem
@@ -108,43 +114,67 @@ class _ReplayTarget:
 
 def replay(trace: TraceRecorder, policy: Optional[str] = None,
            n_lanes: Optional[int] = None,
-           recorder: Optional[TraceRecorder] = None) -> Report:
+           recorder: Optional[TraceRecorder] = None,
+           region_slots: Optional[int] = None,
+           region_policy: Optional[str] = None) -> Report:
     """Re-run the scheduler over a recorded arrival sequence.
 
-    With no overrides, policy and lane count come from the trace's
-    ``config`` event and the run must reproduce the recorded placements
-    exactly; pass a different ``policy``/``n_lanes`` to ask "what would
-    policy X have done on this workload" offline.
+    With no overrides, policy, lane count, and region-residency config
+    come from the trace's ``config`` event and the run must reproduce
+    the recorded placements exactly; pass a different ``policy`` /
+    ``n_lanes`` / ``region_slots`` / ``region_policy`` to ask "what
+    would X have done on this workload" offline.
+
+    Traces recorded with regions enabled carry each item's region key
+    (stringified) and its pinned reconfiguration cost in the submit
+    events; the replayed scheduler rebuilds the region file from those,
+    so residency decisions — and the swap charges they imply — replay
+    without the original targets or any artifact cache.
     """
     cfgs = trace.of_kind("config")
     cfg = cfgs[0] if cfgs else {"policy": "edf", "n_lanes": 2}
     submits = sorted(trace.of_kind("submit"), key=lambda e: e["seq"])
     if not submits:
         raise ValueError("trace has no submit events to replay")
+    if region_slots is None:
+        region_slots = cfg.get("region_slots")
+    if region_policy is None:
+        region_policy = cfg.get("region_policy", "lru")
 
     queue = RequestQueue()
     estimates: dict[int, Estimate] = {}
+    pinned_costs: dict[tuple, float] = {}
     for e in submits:
+        rk = (("trace", e["region_key"])
+              if e.get("region_key") is not None else None)
         item = WorkItem(seq=e["seq"], target=_ReplayTarget(e["seq"]),
                         operands=(), deadline=e.get("deadline"),
                         arrival=e["arrival"], tenant=e.get("tenant",
                                                            "default"),
                         weight=e.get("weight", 1.0),
                         key=None if e.get("key") is None
-                        else ("replay", e["key"]))
+                        else ("replay", e["key"]),
+                        region_key=rk)
         queue.pending.append(item)
         estimates[item.seq] = Estimate(
             seconds=e["predicted_s"], modeled_s=e["modeled_s"],
             dram_busy_s=e["dram_busy_s"], dram_bytes=e["dram_bytes"],
             source="replay")
+        if rk is not None:
+            pinned_costs[rk] = e.get("region_cost_s", 0.0)
     # keep the queue's seq counter ahead of the replayed items
     for _ in range(max(e["seq"] for e in submits) + 1):
         next(queue._seq)
 
+    region_cost = (PinnedReconfigCost(pinned_costs)
+                   if region_slots is not None else None)
     sched = Scheduler(queue, cost=ReplayCost(estimates),
                       policy=policy or cfg["policy"],
                       n_lanes=n_lanes or cfg["n_lanes"],
-                      clock="virtual", recorder=recorder)
+                      clock="virtual", recorder=recorder,
+                      region_slots=region_slots,
+                      region_policy=region_policy,
+                      region_cost=region_cost)
     return sched.drain()
 
 

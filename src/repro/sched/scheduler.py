@@ -60,6 +60,7 @@ from repro.core.isa import FusedProgram
 from repro.graph.plan import Plan
 from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
+from repro.regions import RegionFile, region_key_of
 
 from .cost import CostModel, Estimate
 from .queue import Batch, RequestQueue, WorkItem, program_of
@@ -247,7 +248,10 @@ class Scheduler:
     def __init__(self, queue: RequestQueue, cost: Optional[CostModel] = None,
                  policy: str = "edf", n_lanes: int = 2, mesh=None,
                  mesh_axis: str = "parts", mode: Optional[str] = None,
-                 clock: str = "wall", recorder=None, plan_cache=None):
+                 clock: str = "wall", recorder=None, plan_cache=None,
+                 region_slots: Optional[int] = None,
+                 region_policy: str = "lru", region_cost=None,
+                 region_file: Optional[RegionFile] = None):
         if clock not in ("wall", "virtual"):
             raise ValueError(f"clock must be 'wall' or 'virtual', got "
                              f"{clock!r}")
@@ -284,9 +288,28 @@ class Scheduler:
         self._deadlines: dict[int, Optional[float]] = {}
         self._submitted: set[int] = set()
         self._plan_durations: dict[tuple, float] = {}
+        # region residency (repro.regions, DESIGN.md §16): off unless a
+        # slot bound (0 = track-but-unbounded) or a RegionFile is given.
+        if region_file is not None:
+            if region_file.n_lanes != self.n_lanes:
+                raise ValueError(
+                    f"region_file has {region_file.n_lanes} lanes, "
+                    f"scheduler has {self.n_lanes}")
+            self.regions: Optional[RegionFile] = region_file
+        elif region_slots is not None:
+            self.regions = RegionFile(self.n_lanes, slots=region_slots,
+                                      policy=region_policy,
+                                      cost=region_cost)
+        else:
+            self.regions = None
+        self._region_noted: set[int] = set()
         if recorder is not None:
-            recorder.record("config", policy=self.policy.name,
-                            n_lanes=self.n_lanes, clock=clock)
+            cfg = dict(policy=self.policy.name, n_lanes=self.n_lanes,
+                       clock=clock)
+            if self.regions is not None:
+                cfg.update(region_slots=self.regions.slots_cfg,
+                           region_policy=self.regions.policy_name)
+            recorder.record("config", **cfg)
 
     # -- clocks ---------------------------------------------------------------
     def now(self) -> float:
@@ -403,9 +426,60 @@ class Scheduler:
                 total += self.cost.contended_makespan(ests)
         return total
 
+    def _region_key(self, item: WorkItem) -> tuple:
+        if item.region_key is None:
+            item.region_key = region_key_of(item.target)
+        return item.region_key
+
+    def _assign_lanes(self, round_batches: list[Batch],
+                      now: float) -> tuple[list[int], list[float]]:
+        """Pick a lane per batch (policy order) and commit the region
+        loads; returns the lanes plus the charged swap seconds.
+
+        Regions off → lanes are the batch indices, exactly the historic
+        ``enumerate`` packing. Regions on → each batch takes the
+        cheapest-to-configure free lane (resident > free slot > evict),
+        tie-broken on lane index — so when every charge is zero
+        (unbounded slots) the assignment degenerates to the historic
+        one and placements stay bit-identical (the ``bench_regions``
+        identity gate).
+        """
+        n = len(round_batches)
+        if self.regions is None:
+            return list(range(n)), [0.0] * n
+        tr = _trace.ACTIVE
+        lanes, charges = [], []
+        free = list(range(self.n_lanes))
+        for b in round_batches:
+            rk = self._region_key(b.items[0])
+            lane = min(free,
+                       key=lambda l: (self.regions.charge(l, rk), l))
+            free.remove(lane)
+            cost_s, events = self.regions.place(lane, rk, now)
+            lanes.append(lane)
+            charges.append(cost_s)
+            if self.recorder is not None:
+                for ev in events:
+                    self.recorder.record(
+                        "region", op=ev.op, lane=ev.lane,
+                        key=repr(ev.key), cost_s=ev.cost_s,
+                        round=self._round)
+            if cost_s and tr is not None:
+                with tr.span("reconfig", parent=b.items[0].span,
+                             lane=lane, key=repr(rk), cost_s=cost_s,
+                             round=self._round):
+                    pass
+        return lanes, charges
+
     def _run_round(self, round_batches: list[Batch]) -> None:
         start = self.now()
+        lanes, charges = self._assign_lanes(round_batches, start)
         ests = [self._batch_estimate(b) for b in round_batches]
+        if any(charges):
+            # the swap penalty serialises ahead of the batch's own work
+            # on its lane, so it joins the round's contended makespan
+            ests = [dataclasses.replace(e, seconds=e.seconds + c)
+                    for e, c in zip(ests, charges)]
         makespan = self.cost.contended_makespan(ests)
 
         tr = _trace.ACTIVE
@@ -414,7 +488,7 @@ class Scheduler:
             results = [[None] * len(b.items) for b in round_batches]
             finishes = [start + makespan] * len(round_batches)
             if tr is not None:
-                for lane, b in enumerate(round_batches):
+                for lane, b in zip(lanes, round_batches):
                     with tr.span("placement", parent=b.items[0].span,
                                  lane=lane, round=self._round,
                                  batch_seq=b.seq, n_items=len(b.items),
@@ -423,7 +497,7 @@ class Scheduler:
         else:
             observed, results, finishes = [], [], []
             done = 0.0
-            for lane, b in enumerate(round_batches):
+            for lane, b in zip(lanes, round_batches):
                 t0 = time.perf_counter()
                 if tr is not None and b.items[0].span is not None:
                     # hang the lane's work off the request's root span so
@@ -448,8 +522,8 @@ class Scheduler:
                                   n_items=len(b.items),
                                   cost_key=it0.cost_key)
 
-        for lane, (b, outs, obs, fin) in enumerate(
-                zip(round_batches, results, observed, finishes)):
+        for lane, b, outs, obs, fin in zip(
+                lanes, round_batches, results, observed, finishes):
             for it, out in zip(b.items, outs):
                 it.result = out
                 it.predicted_s = self._estimate(it).seconds
@@ -491,13 +565,21 @@ class Scheduler:
                     continue
                 self._submitted.add(it.seq)
                 est = self._estimate(it)
+                extra = {}
+                if self.regions is not None:
+                    # region identity + pinned load cost, so replay()
+                    # reproduces residency decisions without the targets
+                    rk = self._region_key(it)
+                    extra = dict(region_key=repr(rk),
+                                 region_cost_s=self.regions.cost.cost(rk))
                 self.recorder.record(
                     "submit", seq=it.seq, arrival=it.arrival,
                     deadline=it.deadline, tenant=it.tenant,
                     weight=it.weight,
                     key=None if it.key is None else repr(it.key),
                     predicted_s=est.seconds, modeled_s=est.modeled_s,
-                    dram_busy_s=est.dram_busy_s, dram_bytes=est.dram_bytes)
+                    dram_busy_s=est.dram_busy_s, dram_bytes=est.dram_bytes,
+                    **extra)
 
     def drain(self) -> Report:
         """Schedule until the queue is empty; returns the cumulative
@@ -520,6 +602,16 @@ class Scheduler:
                     time.sleep(max(0.0, nxt - now))
                 continue
             self._record_submits(batches)
+            if self.regions is not None:
+                # feed the reuse predictor in arrival order, once per item
+                fresh = [(it, self._region_key(it)) for b in batches
+                         for it in b.items
+                         if it.seq not in self._region_noted]
+                for it, rk in sorted(fresh,
+                                     key=lambda p: (p[0].arrival,
+                                                    p[0].seq)):
+                    self._region_noted.add(it.seq)
+                    self.regions.note_arrival(rk, it.tenant, it.arrival)
             ordered = self.policy.order(batches, self.now(), self._estimate)
             self._run_round(ordered[:self.n_lanes])
             for b in ordered[self.n_lanes:]:

@@ -608,3 +608,184 @@ class TestEwmaPersistence:
         out = json.loads(proc.stdout.splitlines()[-1])
         assert out["correction"] == pytest.approx(3.0), (
             "fresh process did not warm-start its EWMA correction")
+
+
+class TestSampling:
+    """Head-based per-request sampling (ISSUE 8): the keep decision is
+    made once at the root and inherited by the whole request tree."""
+
+    def test_rate_one_keeps_everything(self):
+        t = obs_trace.Tracer(sample_rate=1.0)
+        for i in range(5):
+            t.finish(t.start_span("request", parent=None, i=i))
+        assert len(t.spans) == 5 and t.unsampled == 0
+
+    def test_rate_zero_keeps_nothing(self):
+        t = obs_trace.Tracer(sample_rate=0.0)
+        for i in range(5):
+            s = t.start_span("request", parent=None, i=i)
+            assert not s.sampled and s.span_id == 0
+            t.finish(s)
+        assert len(t.spans) == 0 and t.unsampled == 5
+
+    def test_fractional_rate_deterministic_cadence(self):
+        t = obs_trace.Tracer(sample_rate=0.25)
+        kept = []
+        for i in range(8):
+            root = t.start_span("request", parent=None, i=i)
+            if root.sampled:
+                kept.append(i)
+            t.finish(root)
+        # credit accumulator: first root sampled, then every 4th
+        assert kept == [0, 4]
+        assert t.unsampled == 6
+        assert len(t.spans) == 2
+
+    def test_children_inherit_root_decision(self):
+        t = obs_trace.Tracer(sample_rate=0.5)
+        n_stored = 0
+        for i in range(4):
+            root = t.start_span("request", parent=None)
+            child = t.start_span("admission", parent=root)
+            grand = t.start_span("dispatch", parent=child)
+            assert child.sampled == root.sampled == grand.sampled
+            for s in (grand, child, root):
+                t.finish(s)
+            n_stored += 3 * root.sampled
+        assert len(t.spans) == n_stored
+        # dropped trees leave no orphans: every stored parent_id resolves
+        ids = {s.span_id for s in t.spans}
+        assert all(s.parent_id in ids for s in t.spans
+                   if s.parent_id is not None)
+
+    def test_unsampled_spans_skip_exports(self):
+        t = obs_trace.Tracer(sample_rate=0.5)
+        for i in range(4):
+            root = t.start_span("request", parent=None)
+            t.finish(t.start_span("work", parent=root))
+            t.finish(root)
+        for line in t.export_jsonl().splitlines():
+            assert json.loads(line)["span_id"] != 0
+
+    def test_rate_validated(self):
+        for bad in (-0.1, 1.5):
+            with pytest.raises(ValueError):
+                obs_trace.Tracer(sample_rate=bad)
+
+
+class TestOtlpExport:
+    """OTLP/JSON export (ISSUE 8): collector-shaped document, byte-
+    stable under the virtual clock."""
+
+    def _tree(self):
+        t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+        root = t.start_span("request", parent=None, tenant="a", seq=1)
+        child = t.start_span("admission", parent=root, ok=True)
+        t.finish(child)
+        t.finish(root)
+        lone = t.start_span("gc", parent=None, freed=3.5)
+        t.finish(lone)
+        return t
+
+    def test_document_shape(self):
+        doc = json.loads(self._tree().export_otlp_json())
+        rs, = doc["resourceSpans"]
+        svc = rs["resource"]["attributes"][0]
+        assert svc["key"] == "service.name"
+        assert svc["value"] == {"stringValue": "repro"}
+        ss, = rs["scopeSpans"]
+        assert ss["scope"]["name"] == "repro.obs"
+        assert len(ss["spans"]) == 3
+
+    def test_trace_and_parent_ids(self):
+        doc = json.loads(self._tree().export_otlp_json())
+        spans = {s["name"]: s
+                 for s in doc["resourceSpans"][0]["scopeSpans"][0]["spans"]}
+        root, child = spans["request"], spans["admission"]
+        assert child["traceId"] == root["traceId"]  # same request tree
+        assert spans["gc"]["traceId"] != root["traceId"]
+        assert child["parentSpanId"] == root["spanId"]
+        assert root["parentSpanId"] == ""
+        assert len(root["traceId"]) == 32 and len(root["spanId"]) == 16
+        assert all(s["kind"] == 1 for s in spans.values())
+
+    def test_nanos_are_strings(self):
+        doc = json.loads(self._tree().export_otlp_json())
+        s = doc["resourceSpans"][0]["scopeSpans"][0]["spans"][0]
+        assert isinstance(s["startTimeUnixNano"], str)
+        assert int(s["endTimeUnixNano"]) >= int(s["startTimeUnixNano"])
+
+    def test_typed_attributes(self):
+        doc = json.loads(self._tree().export_otlp_json())
+        spans = {s["name"]: s
+                 for s in doc["resourceSpans"][0]["scopeSpans"][0]["spans"]}
+        attrs = {a["key"]: a["value"]
+                 for a in spans["request"]["attributes"]}
+        assert attrs["tenant"] == {"stringValue": "a"}
+        assert attrs["seq"] == {"intValue": "1"}
+        ok = {a["key"]: a["value"]
+              for a in spans["admission"]["attributes"]}["ok"]
+        assert ok == {"boolValue": True}
+        freed = {a["key"]: a["value"]
+                 for a in spans["gc"]["attributes"]}["freed"]
+        assert freed == {"doubleValue": 3.5}
+
+    def test_byte_stable(self):
+        assert (self._tree().export_otlp_json()
+                == self._tree().export_otlp_json())
+
+
+class TestDriftThreshold:
+    """Threshold wiring (ISSUE 8): chronic drift is queryable via
+    exceeding() and counted in repro_drift_exceeded_total."""
+
+    def _counter(self):
+        return obs_metrics.REGISTRY.counter("repro_drift_exceeded_total")
+
+    def test_counter_needs_two_samples(self):
+        base = self._counter().value
+        t = obs_drift.DriftTracker(threshold=0.5)
+        t.record("k", 1.0, 10.0)  # one huge outlier: not chronic yet
+        assert self._counter().value == base
+        t.record("k", 1.0, 10.0)
+        assert self._counter().value == base + 1
+
+    def test_within_tolerance_never_counts(self):
+        base = self._counter().value
+        t = obs_drift.DriftTracker(threshold=0.5)
+        for _ in range(5):
+            t.record("k", 1.0, 1.2)  # 20% drift < 50% threshold
+        assert self._counter().value == base
+        assert t.exceeding() == []
+
+    def test_exceeding_lists_offenders_worst_first(self):
+        t = obs_drift.DriftTracker(threshold=0.25)
+        for _ in range(3):
+            t.record("bad", 1.0, 2.0, name="bad")
+            t.record("worse", 1.0, 4.0, name="worse")
+            t.record("fine", 1.0, 1.1, name="fine")
+        rows = t.exceeding()
+        assert [r["name"] for r in rows] == ["worse", "bad"]
+        # explicit threshold overrides the constructor's
+        assert {r["name"] for r in t.exceeding(threshold=0.05)} == {
+            "worse", "bad", "fine"}
+
+    def test_no_threshold_anywhere_raises(self):
+        t = obs_drift.DriftTracker()
+        t.record("k", 1.0, 2.0)
+        with pytest.raises(ValueError):
+            t.exceeding()
+
+    def test_threshold_validated(self):
+        with pytest.raises(ValueError):
+            obs_drift.DriftTracker(threshold=0.0)
+
+    def test_cost_model_plumbs_threshold(self):
+        cost = CostModel(hierarchy=TPU_V5E, drift_threshold=0.4)
+        assert cost.drift.threshold == 0.4
+        fused = isa.fuse("c0_scale", "c0_add")
+        est = cost.estimate(fused, n_elems=5000, dtype=F32)
+        for _ in range(2):
+            cost.observe(fused, n_elems=5000, dtype=F32,
+                         seconds=est.seconds * 10)
+        assert cost.drift.exceeding()

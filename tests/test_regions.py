@@ -1,0 +1,404 @@
+"""Reconfigurable-region residency (ISSUE 8, DESIGN.md §16).
+
+Covers :mod:`repro.regions` end to end: structural region keys, the
+reconfig cost model (validation, EWMA observe, measured seeding, the
+``kind="reconfig"`` artifact round-trip incl. malformed payloads and
+the pinned replay variant), the reuse predictor's arrival-time
+semantics, both eviction policies' victim choices, the region file's
+compulsory-load-free charging (charge peek == place commit), and the
+scheduler integration: unbounded slots bit-identical to regions-off,
+bounded slots folding charges into the virtual timeline, byte-stable
+region events in the trace, and bounded-slot replay reproducing the
+recorded placements exactly.
+"""
+import json
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401 — registers the ISA
+from repro.core import artifact, isa
+from repro.core import program as prog_mod
+from repro.memhier import TPU_V5E
+from repro.regions import (LruResidency, PinnedReconfigCost,
+                           PredictedReuseResidency, ReconfigCostModel,
+                           RegionFile, ReuseHistory, make_policy,
+                           region_key_of)
+from repro.regions.cost import _reconfig_payload
+from repro.regions.residency import SlotState
+from repro.sched import (CostModel, RequestQueue, Scheduler, TraceRecorder,
+                         placements_match, replay)
+
+F32 = jnp.float32
+
+
+@pytest.fixture
+def cache_dir(tmp_path):
+    prog_mod.clear_dispatch_caches()
+    with artifact.using_plan_cache(tmp_path):
+        yield tmp_path
+    prog_mod.clear_dispatch_caches()
+
+
+def vec(seed, n=4096):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n), F32)
+
+
+class TestRegionKey:
+    def test_structural_not_instance(self):
+        # two separate fuse() calls of the same chain → one region
+        assert (region_key_of(isa.fuse("c0_scale", "c0_add"))
+                == region_key_of(isa.fuse("c0_scale", "c0_add")))
+
+    def test_distinct_chains_distinct_regions(self):
+        assert (region_key_of(isa.fuse("c0_add"))
+                != region_key_of(isa.fuse("c0_copy")))
+
+    def test_size_and_dtype_free(self):
+        # the key carries no operand geometry — same chain at any size
+        # shares one configured region
+        k = region_key_of(isa.fuse("c0_add"))
+        assert not any(isinstance(part, jnp.ndarray) for part in k)
+        assert k[0] == "prog"
+
+    def test_callable_fallback(self):
+        def opaque(x):
+            return x
+        assert region_key_of(opaque)[0] == "fn"
+        assert "opaque" in region_key_of(opaque)[1]
+
+    def test_repr_stable(self):
+        k = region_key_of(isa.fuse("c0_triad"))
+        assert eval(repr(k)) == k  # noqa: S307 — repr round-trip
+
+
+class TestReconfigCostModel:
+    def test_default_until_seeded(self):
+        m = ReconfigCostModel(default_s=1e-3)
+        assert m.cost(("prog", "x")) == 1e-3
+        assert not m.known(("prog", "x"))
+        m.seed(("prog", "x"), 2e-3)
+        assert m.cost(("prog", "x")) == 2e-3
+        assert m.known(("prog", "x"))
+
+    def test_observe_blends_ewma(self):
+        m = ReconfigCostModel(alpha=0.5)
+        m.observe(("k",), 1.0)
+        assert m.cost(("k",)) == 1.0  # first observation seeds
+        m.observe(("k",), 3.0)
+        assert m.cost(("k",)) == pytest.approx(2.0)
+
+    @pytest.mark.parametrize("bad", [0.0, -1.0, math.inf, math.nan])
+    def test_rejects_nonpositive(self, bad):
+        m = ReconfigCostModel()
+        with pytest.raises(ValueError):
+            m.seed(("k",), bad)
+        with pytest.raises(ValueError):
+            m.observe(("k",), bad)
+
+    def test_measure_requires_program(self):
+        with pytest.raises(TypeError):
+            ReconfigCostModel().measure(lambda x: x, 1024, F32)
+
+    def test_measure_seeds_positive_delta(self):
+        m = ReconfigCostModel()
+        prog = isa.fuse("c0_scale", "c0_add")
+        delta = m.measure(prog, 4096, F32)
+        assert delta > 0
+        assert m.cost(region_key_of(prog)) == delta
+        prog_mod.clear_dispatch_caches()
+
+    def test_artifact_roundtrip_fresh_process_view(self, cache_dir):
+        key = ("prog", "chain", 7)
+        m = ReconfigCostModel()
+        m.seed(key, 3.25e-3)
+        fresh = ReconfigCostModel()
+        assert fresh.known(key)
+        assert fresh.cost(key) == 3.25e-3
+
+    def test_no_cache_no_persistence(self):
+        key = ("prog", "ephemeral")
+        ReconfigCostModel().seed(key, 1e-3)
+        assert not ReconfigCostModel().known(key)
+
+    @pytest.mark.parametrize("raw", [
+        None, [], "x", {}, {"cost_s": -1.0, "count": 1},
+        {"cost_s": math.inf, "count": 1}, {"cost_s": True, "count": 1},
+        {"cost_s": 1e-3, "count": 0}, {"cost_s": 1e-3, "count": True},
+        {"cost_s": 1e-3}, {"count": 2},
+    ])
+    def test_malformed_payload_invalidated(self, raw):
+        assert _reconfig_payload(raw) is None
+
+    def test_corrupt_artifact_falls_back_to_default(self, cache_dir):
+        key = ("prog", "corrupt")
+        ReconfigCostModel().seed(key, 1e-3)
+        path, = cache_dir.rglob("*.json")
+        path.write_text(json.dumps({"cost_s": -5.0, "count": 1}))
+        m = ReconfigCostModel(default_s=7e-4)
+        assert not m.known(key)
+        assert m.cost(key) == 7e-4
+
+    def test_pinned_never_touches_disk(self, cache_dir):
+        key = ("trace", "('prog', 1)")
+        ReconfigCostModel().seed(("prog", "other"), 1e-3)
+        pinned = PinnedReconfigCost({key: 4e-3}, default_s=0.0)
+        assert pinned.cost(key) == 4e-3
+        assert pinned.cost(("prog", "other")) == 0.0  # no disk probe
+        pinned.observe(key, 8e-3)  # must not publish an artifact
+        assert not any("reconfig" in str(p) for p in cache_dir.rglob("*")
+                       if p.is_file() and "other" not in p.read_text())
+
+
+class TestReuseHistory:
+    def test_single_arrival_predicts_never(self):
+        h = ReuseHistory()
+        h.note("A", "t0", 1.0)
+        assert h.predict_next("A") == math.inf
+
+    def test_gap_predicts_next(self):
+        h = ReuseHistory(alpha=1.0)
+        h.note("A", "t0", 1.0)
+        h.note("A", "t0", 3.0)
+        assert h.predict_next("A") == pytest.approx(5.0)
+
+    def test_frontier_floors_overdue(self):
+        h = ReuseHistory(alpha=1.0)
+        h.note("A", "t0", 1.0)
+        h.note("A", "t0", 2.0)   # predicted next = 3.0
+        h.note("B", "t1", 10.0)  # frontier advances past it
+        assert h.predict_next("A") == pytest.approx(10.0)
+
+    def test_multi_tenant_takes_earliest(self):
+        h = ReuseHistory(alpha=1.0)
+        for t in (0.0, 10.0):
+            h.note("A", "slow", t)
+        for t in (8.0, 9.0):
+            h.note("A", "fast", t)
+        assert h.predict_next("A") == pytest.approx(10.0)  # fast tenant
+
+    def test_alpha_validated(self):
+        with pytest.raises(ValueError):
+            ReuseHistory(alpha=0.0)
+
+
+def _slots(**last_used):
+    out = {}
+    for i, (k, lu) in enumerate(last_used.items()):
+        st = SlotState(float(i))
+        st.last_used = lu
+        out[k] = st
+    return out
+
+
+class TestPolicies:
+    def test_make_policy(self):
+        assert isinstance(make_policy("lru"), LruResidency)
+        assert isinstance(make_policy("reuse"), PredictedReuseResidency)
+        with pytest.raises(ValueError):
+            make_policy("clairvoyant")
+
+    def test_lru_evicts_stalest(self):
+        pol = LruResidency()
+        slots = _slots(A=5.0, B=1.0, C=3.0)
+        assert pol.choose_victim(slots, ReconfigCostModel(),
+                                 ReuseHistory(), 6.0) == "B"
+
+    def test_reuse_evicts_never_predicted_first(self):
+        pol = PredictedReuseResidency()
+        h = ReuseHistory(alpha=1.0)
+        for t in (0.0, 1.0):
+            h.note("A", "t", t)  # periodic → due again soon
+        h.note("B", "t", 0.5)    # seen once → predicts never
+        slots = _slots(A=1.0, B=0.5)
+        assert pol.choose_victim(slots, ReconfigCostModel(), h, 1.0) == "B"
+
+    def test_reuse_keeps_due_soonest_on_equal_cost(self):
+        pol = PredictedReuseResidency()
+        h = ReuseHistory(alpha=1.0)
+        for t in (0.0, 1.0):
+            h.note("A", "t", t)   # gap 1 → next ~2
+        for t in (0.0, 5.0):
+            h.note("B", "t", t)   # gap 5 → next ~10
+        slots = _slots(A=1.0, B=5.0)
+        assert pol.choose_victim(slots, ReconfigCostModel(), h, 5.0) == "B"
+
+    def test_reuse_weighs_reload_cost(self):
+        # equally-due regions: evict the cheap one to reload
+        pol = PredictedReuseResidency()
+        h = ReuseHistory(alpha=1.0)
+        for t in (0.0, 4.0):
+            h.note("cheap", "t", t)
+            h.note("dear", "u", t)
+        cost = ReconfigCostModel(default_s=1e-3)
+        cost._cost.update({"cheap": 1e-4, "dear": 1e-1})
+        cost._checked.update({"cheap", "dear"})
+        slots = _slots(cheap=4.0, dear=4.0)
+        assert pol.choose_victim(slots, cost, h, 4.0) == "cheap"
+
+
+class TestRegionFile:
+    def test_unbounded_never_charges(self):
+        rf = RegionFile(n_lanes=1, slots=0)
+        for i in range(10):
+            assert rf.charge(0, ("k", i)) == 0.0
+            cost_s, _ = rf.place(0, ("k", i), float(i))
+            assert cost_s == 0.0
+        assert rf.swap_seconds == 0.0
+        assert not rf.bounded
+        assert rf.slots_cfg == 0
+
+    def test_compulsory_loads_free_then_eviction_charges(self):
+        rf = RegionFile(n_lanes=1, slots=2,
+                        cost=PinnedReconfigCost({}, default_s=1e-3))
+        assert rf.place(0, "A", 0.0)[0] == 0.0   # free slot
+        assert rf.place(0, "B", 1.0)[0] == 0.0   # free slot
+        assert rf.charge(0, "C") == 1e-3          # would evict
+        cost_s, events = rf.place(0, "C", 2.0)
+        assert cost_s == 1e-3
+        assert [e.op for e in events] == ["evict", "load"]
+        assert events[0].key == "A"               # LRU victim
+
+    def test_reload_of_evicted_key_charges_even_into_free_slot(self):
+        rf = RegionFile(n_lanes=1, slots=2,
+                        cost=PinnedReconfigCost({}, default_s=1e-3))
+        rf.place(0, "A", 0.0)
+        rf.place(0, "B", 1.0)
+        rf.place(0, "C", 2.0)  # evicts A
+        del rf._resident[0]["B"]  # simulate an external drop → free slot
+        assert rf.charge(0, "A") == 1e-3  # A was evicted: reconfig needed
+        assert rf.place(0, "A", 3.0)[0] == 1e-3
+
+    def test_charge_peek_matches_place_commit(self):
+        rf = RegionFile(n_lanes=1, slots=1,
+                        cost=PinnedReconfigCost({}, default_s=2e-3))
+        for t, k in enumerate(["A", "B", "A", "A", "B"]):
+            assert rf.charge(0, k) == rf.place(0, k, float(t))[0]
+
+    def test_hits_and_ratio(self):
+        rf = RegionFile(n_lanes=2, slots=4)
+        rf.place(0, "A", 0.0)
+        _, events = rf.place(0, "A", 1.0)
+        assert [e.op for e in events] == ["hit"]
+        assert rf.hits[0] == 1 and rf.loads[0] == 1
+        assert rf.hit_ratio(0) == 0.5
+        assert rf.hit_ratio(1) == 0.0  # untouched lane
+        assert rf.resident(0, "A") and not rf.resident(1, "A")
+
+    def test_report_shape(self):
+        rf = RegionFile(n_lanes=1, slots=3, policy="reuse")
+        rf.place(0, "A", 0.0)
+        rep = rf.report()
+        assert rep["slots"] == 3 and rep["policy"] == "reuse"
+        assert rep["lanes"][0]["resident"] == 1
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RegionFile(n_lanes=0)
+        with pytest.raises(ValueError):
+            RegionFile(n_lanes=1, slots=-1)
+
+
+def _region_queue(n_hot=4):
+    """hot program interleaved with two scans on one lane."""
+    q = RequestQueue()
+    hot = isa.fuse("c0_scale", "c0_add")
+    scan_a, scan_b = isa.fuse("c0_add"), isa.fuse("c0_copy")
+    x, b = vec(1), vec(2)
+    for i in range(n_hot):
+        t = i * 1e-4
+        q.submit(hot, (2.0 + i, x, b), arrival=t, tenant="hot")
+        q.submit(scan_a, (vec(10 + i), b), arrival=t + 3e-5,
+                 tenant="scan")
+        q.submit(scan_b, (vec(20 + i),), arrival=t + 6e-5, tenant="scan")
+    return q
+
+
+def _drain(recorder=None, **kw):
+    rec = recorder if recorder is not None else TraceRecorder()
+    sched = Scheduler(_region_queue(), cost=CostModel(hierarchy=TPU_V5E),
+                      policy="fifo", n_lanes=1, clock="virtual",
+                      recorder=rec, **kw)
+    return sched.drain(), sched, rec
+
+
+class TestSchedulerIntegration:
+    def test_regions_off_by_default(self):
+        _, sched, rec = _drain()
+        assert sched.regions is None
+        assert not rec.of_kind("region")
+        assert "region_slots" not in rec.of_kind("config")[0]
+
+    def test_unbounded_identical_to_off(self):
+        rep_off, _, _ = _drain()
+        rep_unb, sched, rec = _drain(region_slots=0, region_policy="reuse")
+        assert placements_match(rep_off.placements, rep_unb.placements)
+        assert rep_off.makespan == rep_unb.makespan
+        assert sched.regions.swap_seconds == 0.0
+        # residency still observed: loads happened, nothing charged
+        assert sum(sched.regions.loads) > 0
+        assert all(e["cost_s"] == 0.0 for e in rec.of_kind("region"))
+
+    def test_bounded_charges_extend_virtual_timeline(self):
+        cost = PinnedReconfigCost({}, default_s=1e-3)
+        rep_off, _, _ = _drain()
+        rep_b, sched, rec = _drain(region_slots=1, region_policy="lru",
+                                   region_cost=cost)
+        assert sched.regions.swap_seconds > 0
+        assert rep_b.makespan > rep_off.makespan
+        charged = [e for e in rec.of_kind("region") if e["op"] == "load"
+                   and e["cost_s"] > 0]
+        assert charged and all(e["cost_s"] == 1e-3 for e in charged)
+
+    def test_config_and_submit_events_carry_region_fields(self):
+        _, _, rec = _drain(region_slots=2, region_policy="reuse")
+        cfg = rec.of_kind("config")[0]
+        assert cfg["region_slots"] == 2
+        assert cfg["region_policy"] == "reuse"
+        sub = rec.of_kind("submit")[0]
+        assert sub["region_key"].startswith("('prog'")
+        assert sub["region_cost_s"] >= 0
+
+    def test_trace_byte_roundtrip_with_region_events(self):
+        _, _, rec = _drain(region_slots=1, region_policy="lru",
+                           region_cost=PinnedReconfigCost(
+                               {}, default_s=1e-3))
+        text = rec.dumps()
+        loaded = TraceRecorder.loads(text)
+        assert loaded.dumps() == text
+        assert loaded.of_kind("region")
+
+    @pytest.mark.parametrize("policy", ["lru", "reuse"])
+    def test_bounded_replay_reproduces_placements(self, policy):
+        rep, _, rec = _drain(region_slots=1, region_policy=policy,
+                             region_cost=PinnedReconfigCost(
+                                 {}, default_s=1e-3))
+        loaded = TraceRecorder.loads(rec.dumps())
+        rep2 = replay(loaded)
+        assert placements_match(rep.placements, rep2.placements)
+        assert rep2.makespan == pytest.approx(rep.makespan)
+
+    def test_replay_can_rerun_with_different_bound(self):
+        # same trace, tighter bound → a what-if, not a crash
+        rep, _, rec = _drain(region_slots=2, region_policy="lru",
+                             region_cost=PinnedReconfigCost(
+                                 {}, default_s=1e-3))
+        loaded = TraceRecorder.loads(rec.dumps())
+        rep2 = replay(loaded, region_slots=1)
+        assert len(rep2.placements) == len(rep.placements)
+
+    def test_region_file_shared_across_rounds_not_rebuilt(self):
+        _, sched, _ = _drain(region_slots=1, region_policy="lru",
+                             region_cost=PinnedReconfigCost(
+                                 {}, default_s=1e-3))
+        # evictions only accumulate if one file persists across rounds
+        assert sched.regions.evictions[0] > 1
+
+    def test_mismatched_region_file_rejected(self):
+        rf = RegionFile(n_lanes=3, slots=2)
+        with pytest.raises(ValueError):
+            Scheduler(_region_queue(), cost=CostModel(hierarchy=TPU_V5E),
+                      n_lanes=1, clock="virtual", region_file=rf)
