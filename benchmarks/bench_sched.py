@@ -10,7 +10,10 @@ Three families of gates:
   * **Coalescing** — submitting N same-structure requests through the
     queue (one ``call_batch`` launch sharing one warm dispatch) beats N
     independent ``__call__``s on modeled DRAM overhead AND on measured
-    wall clock (median of k ≥ 5 samples, the noise-aware baseline rows).
+    wall clock (median of k ≥ 5 samples, the noise-aware baseline rows);
+    scalar-batched coalescing (ISSUE 9) merges requests that differ
+    only in scalar values bit-identically, beating value-exact grouping
+    on median batch size.
   * **Replay** — a recorded trace round-trips byte-identically through
     dump/load, and re-running the scheduler on the replayed arrival
     sequence reproduces the placements exactly.
@@ -36,12 +39,15 @@ N_REQUESTS = 16      # enough calls that per-launch overhead dominates
 
 def _check_contention() -> None:
     cost = CostModel(hierarchy=TPU_V5E)
-    # two HBM-bound streaming parts with DISTINCT scalar operands, so the
-    # queue cannot coalesce them: they land on two lanes of one round and
-    # the contended pricing is genuinely exercised.
+    # two HBM-bound streaming parts from DISTINCT programs, so the queue
+    # cannot coalesce them (scalar values no longer split keys — the
+    # scalar-batched path below would merge same-program requests): they
+    # land on two lanes of one round and the contended pricing is
+    # genuinely exercised.
     scale = isa.fuse("c0_scale")
+    copy1 = isa.fuse("c0_copy")
     e1 = cost.estimate(scale, n_elems=N, dtype=jnp.float32)
-    e2 = cost.estimate(scale, n_elems=N, dtype=jnp.float32)
+    e2 = cost.estimate(copy1, n_elems=N, dtype=jnp.float32)
     solo = max(e1.seconds, e2.seconds)
     serial = e1.seconds + e2.seconds
     contended = cost.contended_makespan([e1, e2])
@@ -62,7 +68,7 @@ def _check_contention() -> None:
     y = jnp.asarray(rng.standard_normal(N), jnp.float32)
     q = RequestQueue()
     q.submit(scale, (2.0, x))
-    q.submit(scale, (3.0, y))
+    q.submit(copy1, (y,))
     rep = Scheduler(q, cost=cost, policy="edf", n_lanes=2,
                     clock="virtual").drain()
     lanes_used = {p.lane for p in rep.placements}
@@ -127,6 +133,42 @@ def _check_coalescing() -> None:
         f"one-by-one calls ({solo_med:.0f}us)")
 
 
+def _check_scalar_batching() -> None:
+    """Scalar-batched coalescing (ISSUE 9): requests differing only in
+    scalar values share one launch — bit-identical per item, and the
+    median batch size strictly beats value-exact grouping (which put
+    every distinct scalar in its own batch of 1)."""
+    fused = isa.fuse("c0_scale", "c0_add")
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(N_BATCH), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(N_BATCH), jnp.float32)
+    scalars = [float(i + 2) for i in range(N_REQUESTS)]   # all distinct
+
+    prog_mod.reset_dispatch_stats()
+    q = RequestQueue()
+    for s in scalars:
+        q.submit(fused, (s, x, b))
+    rep = Scheduler(q, policy="fifo", n_lanes=1, clock="wall",
+                    mode="interpret").drain()
+    per_batch: dict[int, int] = {}
+    for p_ in rep.placements:
+        per_batch[p_.batch_seq] = per_batch.get(p_.batch_seq, 0) + 1
+    batch_sizes = sorted(per_batch.values())
+    med = float(batch_sizes[len(batch_sizes) // 2])
+    row("sched_mixed_scalar_batch_size", med,
+        f"n:{N_REQUESTS}_launches:{len(per_batch)}"
+        f"_mixed:{prog_mod.DISPATCH_STATS.batch_mixed}")
+    assert med > 1.0, (
+        "distinct-scalar requests no longer coalesce (median batch "
+        f"size {med:.0f}; value-exact grouping would give 1)")
+    assert prog_mod.DISPATCH_STATS.batch_mixed >= 1, \
+        "the scalar-batched dispatch path never engaged"
+    for seq, s in enumerate(scalars):
+        want = fused(s, x, b, mode="interpret")
+        np.testing.assert_array_equal(np.asarray(rep.results[seq]),
+                                      np.asarray(want))
+
+
 def _check_replay() -> None:
     fused = isa.fuse("c0_scale", "c0_add")
     copy1 = isa.fuse("c0_copy")
@@ -158,6 +200,7 @@ def _check_replay() -> None:
 def main() -> None:
     _check_contention()
     _check_coalescing()
+    _check_scalar_batching()
     _check_replay()
 
 

@@ -41,8 +41,11 @@ import sys
 # if the two constants drifted, sampled rows would silently stop gating.
 from .common import MIN_SAMPLES, median as _median
 
+# "makespan"/"finish" cover the §18 channel rows: per-round fluid
+# makespans and per-item fluid finishes are deterministic model outputs,
+# lower-is-better, same as the predicted/modeled families.
 DEFAULT_PATTERNS = ("predicted", "modeled", "overlap", "best_hand",
-                    "makespan")
+                    "makespan", "finish")
 
 
 def load_rows(path: str, required: bool = False) -> dict[str, dict]:

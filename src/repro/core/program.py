@@ -125,6 +125,7 @@ class DispatchStats:
     rebucketed: int = 0          # warm buckets re-negotiated on cost drift
     batch_calls: int = 0         # coalesced call_batch launches
     batch_items: int = 0         # work items those coalesced launches served
+    batch_mixed: int = 0         # coalesced launches with per-item scalars
     # persistent-artifact cache (core.artifact, DESIGN.md §14):
     disk_hit: int = 0            # artifacts loaded + verified from disk
     disk_miss: int = 0           # disk consults that found no entry
@@ -132,6 +133,8 @@ class DispatchStats:
     disk_corrupt: int = 0        # unreadable/truncated entries dropped
     disk_store: int = 0          # artifacts atomically published to disk
     disk_evict: int = 0          # artifacts removed by the LRU size sweep
+    # obs→cost action loop (DESIGN.md §15/§18):
+    drift_renegotiated: int = 0  # geometry sweeps re-run on chronic drift
 
 
 _STAT_FIELDS = tuple(f.name for f in dataclasses.fields(DispatchStats))
@@ -373,6 +376,56 @@ def _cache_geometry(key, value) -> None:
     _GEOMETRY_CACHE[key] = value
 
 
+# -- drift-triggered re-negotiation (obs → cost action loop, §15) -----------
+# Pending (program identity, n_elems bucket, dtype name) cells whose
+# chronic modeled-vs-observed drift asked for a fresh geometry sweep;
+# consumed (and cleared) by the next _resolve_geometry on that cell.
+_RENEGOTIATE: set = set()
+
+
+def request_renegotiation(identity, bucket: int, dtype_name: str) -> None:
+    """Ask the next dispatch of ``(identity, bucket, dtype)`` to re-run
+    its geometry sweep from scratch — memo and disk consult skipped,
+    warm bucket and cached sweeps purged. This is the *action half* of
+    drift tracking (DESIGN.md §15): :meth:`repro.sched.cost.CostModel.
+    observe` calls it when a cell's accumulated drift stays past the
+    tracker threshold, closing the loop from observation back into the
+    dispatch path. Idempotent until consumed; consumption is counted in
+    ``DISPATCH_STATS.drift_renegotiated``."""
+    _RENEGOTIATE.add((identity, int(bucket), str(dtype_name)))
+
+
+def _purge_geometry(identity, bucket: int, dtype_name: str) -> None:
+    """Drop memoised sweeps for one (identity, size bucket, dtype) cell."""
+    stale = [k for k in _GEOMETRY_CACHE
+             if k[0] == identity and _n_bucket(k[1]) == bucket
+             and k[2] == dtype_name]
+    for k in stale:
+        _GEOMETRY_CACHE.pop(k, None)
+
+
+class _ItemScalarRef:
+    """Per-item view over a batch-stacked SMEM scalar ref.
+
+    Scalar-batched coalescing (DESIGN.md §13) stacks each scalar operand
+    slot's per-item values into one ``(k_items, ...)`` SMEM array; stage
+    bodies keep indexing ``scalars[j][0]`` / ``scalars[j][...]`` exactly
+    as if the scalar were solo — this view routes those reads to the row
+    of the item owning the current row block.
+    """
+
+    __slots__ = ("_ref", "_item")
+
+    def __init__(self, ref, item):
+        self._ref = ref
+        self._item = item
+
+    def __getitem__(self, idx):
+        if idx is Ellipsis:
+            return self._ref[self._item]
+        return self._ref[self._item, idx]
+
+
 # -- persistent geometry artifacts (core.artifact, DESIGN.md §14) -----------
 # Payload of one "geom" disk entry: the memo value serialised flat. The
 # StreamConfig is stored by its three defining ints (its derived
@@ -608,14 +661,17 @@ class Program:
         return n_io * self.model.time_for(padded * bits / 8,
                                           block_elems * bits / 8)
 
-    def _negotiate_scored(self, n_elems: int, dtype):
+    def _negotiate_scored(self, n_elems: int, dtype, fresh: bool = False):
         """The negotiation loop; returns (block_rows, block_cols,
-        StreamConfig, modeled seconds of the winner)."""
+        StreamConfig, modeled seconds of the winner). ``fresh`` skips
+        the memo and the disk consult — the drift-triggered
+        re-negotiation path distrusts the cached answer, so it must pay
+        the sweep — while the result is still published to both."""
         model_fp = self._current_model_fp()
         key = (self._identity, int(n_elems), _dtype_name(dtype),
                model_fp, self.vmem_budget,
                self.n_buffers)
-        hit = _GEOMETRY_CACHE.get(key)
+        hit = None if fresh else _GEOMETRY_CACHE.get(key)
         if hit is not None:
             DISPATCH_STATS.geometry_hits += 1
             if hit[0] == "no-fit":
@@ -636,7 +692,7 @@ class Program:
         disk = _artifact.plan_cache()
         if disk is not None and not _artifact.persistable_fingerprint(model_fp):
             disk = None
-        if disk is not None:
+        if disk is not None and not fresh:
             loaded = disk.load("geom", key, decode=_geometry_from_payload)
             if loaded is not None:
                 DISPATCH_STATS.geometry_hits += 1
@@ -695,8 +751,14 @@ class Program:
         return result
 
     # -- kernel emission ----------------------------------------------------
-    def _fused_kernel(self, block_rows: int, block_cols: int):
-        """Build the single kernel running all stage bodies back to back."""
+    def _fused_kernel(self, block_rows: int, block_cols: int,
+                      scalar_items: int = 0):
+        """Build the single kernel running all stage bodies back to back.
+
+        ``scalar_items`` > 0 marks a scalar-batched coalesced launch: the
+        scalar operands arrive stacked per item and each row block reads
+        its owning item's row (``scalar_items`` = row blocks per item,
+        DESIGN.md §13)."""
         stages, n_ext = self.stages, self._n_ext
         ns, nv, no = self.n_scalar_in, self.n_ext_vec_in, self.n_vec_out
         n_inter = self.n_intermediates
@@ -706,6 +768,10 @@ class Program:
             # execution — the bench_hotpath zero-retrace gate reads it.
             DISPATCH_STATS.kernel_traces += 1
             scalar_refs = refs[:ns]
+            if scalar_items:
+                item = pl.program_id(0) // scalar_items
+                scalar_refs = tuple(_ItemScalarRef(r, item)
+                                    for r in scalar_refs)
             vec_refs = refs[ns:ns + nv]
             out_refs = refs[ns + nv:ns + nv + no]
             scratch = refs[ns + nv + no:]
@@ -738,12 +804,16 @@ class Program:
 
     def call_blocks(self, *operands, block_rows: Optional[int] = None,
                     block_cols: Optional[int] = None,
+                    scalar_items: int = 0,
                     interpret: bool = False):
         """Launch on pre-normalised 2D operands (the strict template path).
 
         Vector operands must already be (rows, cols) with rows/cols
         divisible by the block geometry; defaults to the stages' declared
         geometry (single stage: exactly the old KernelTemplate behaviour).
+        ``scalar_items`` > 0 is the scalar-batched coalesced path: scalar
+        operands are ``(k_items, ...)`` stacks and each group of
+        ``scalar_items`` row blocks reads its own item's values.
         """
         stages = self.stages
         last = stages[-1]
@@ -781,8 +851,11 @@ class Program:
 
         # warm dispatch: one jitted pallas_call per operand signature —
         # a repeat call with the same shapes re-traces nothing.
-        scalars = tuple(jnp.asarray(s).reshape(-1) for s in scalars)
-        sig = (block_rows, block_cols, bool(interpret),
+        if scalar_items:
+            scalars = tuple(jnp.asarray(s) for s in scalars)
+        else:
+            scalars = tuple(jnp.asarray(s).reshape(-1) for s in scalars)
+        sig = (block_rows, block_cols, bool(interpret), int(scalar_items),
                tuple((tuple(s.shape), _dtype_name(s.dtype))
                      for s in scalars),
                tuple((tuple(v.shape), _dtype_name(v.dtype))
@@ -799,14 +872,14 @@ class Program:
         with _sp:
             fn = self._build_call(stages, scalars, vectors, out_shape,
                                   block_rows, block_cols, grid, cols,
-                                  interpret)
+                                  interpret, scalar_items)
         if len(self._exe_cache) >= _EXE_CACHE_MAX:
             self._exe_cache.pop(next(iter(self._exe_cache)))
         self._exe_cache[sig] = fn
         return fn(*scalars, *vectors)
 
     def _build_call(self, stages, scalars, vectors, out_shape, block_rows,
-                    block_cols, grid, cols, interpret):
+                    block_cols, grid, cols, interpret, scalar_items=0):
         """Construct the jitted ``pallas_call`` for one operand
         signature (the cold half of :meth:`call_blocks`)."""
         blockspec = pl.BlockSpec((block_rows, block_cols),
@@ -839,7 +912,7 @@ class Program:
                 dimension_semantics=("parallel", "arbitrary"))
 
         fn = jax.jit(pl.pallas_call(
-            self._fused_kernel(block_rows, block_cols),
+            self._fused_kernel(block_rows, block_cols, scalar_items),
             grid=grid,
             in_specs=in_specs,
             out_specs=out_specs if len(out_shape) > 1 else out_specs[0],
@@ -890,13 +963,29 @@ class Program:
         and if the best geometry beats the cached one by more than the
         drift band, the bucket is updated (``DISPATCH_STATS.rebucketed``).
         So sweeps stay warm while the bucket approximation stays bounded.
+
+        A pending drift re-negotiation request for this (identity,
+        bucket, dtype) cell (:func:`request_renegotiation` — filed by
+        the cost model when chronic modeled-vs-observed drift exceeds
+        its tracker threshold) is consumed here: the warm bucket and the
+        memoised sweeps are purged and the negotiation re-runs fresh
+        (``DISPATCH_STATS.drift_renegotiated``).
         """
         dkey = (_n_bucket(n), _dtype_name(dtype),
                 self._current_model_fp(), self.vmem_budget,
                 self.n_buffers)
         entry = self._dispatch_cache.get(dkey)
+        fresh = False
+        if _RENEGOTIATE:
+            rkey = (self._identity, _n_bucket(n), _dtype_name(dtype))
+            if rkey in _RENEGOTIATE:
+                _RENEGOTIATE.discard(rkey)
+                DISPATCH_STATS.drift_renegotiated += 1
+                _purge_geometry(*rkey)
+                self._dispatch_cache.pop(dkey, None)
+                entry, fresh = None, True
         if entry is None:
-            br, bc, _, t = self._negotiate_scored(n, dtype)
+            br, bc, _, t = self._negotiate_scored(n, dtype, fresh=fresh)
             if len(self._dispatch_cache) >= _DISPATCH_CACHE_MAX:
                 self._dispatch_cache.pop(next(iter(self._dispatch_cache)))
             entry = _WarmEntry(br, bc, n, t)
@@ -980,7 +1069,7 @@ class Program:
         """Coalesced dispatch: N same-structure requests, ONE launch.
 
         ``batch`` is a sequence of operand tuples that must agree on
-        scalar operand *values* and on vector shapes/dtype (the
+        scalar operand shapes/dtypes and on vector shapes/dtype (the
         :func:`repro.sched.queue.coalesce_key` grouping invariant), and
         every stage must be shape-preserving. Each item is normalised to
         whole blocks exactly as a solo :meth:`__call__` would be, the
@@ -990,6 +1079,16 @@ class Program:
         item boundary; carried state is per row-block in both paths)
         while the per-launch Python/dispatch overhead is paid once.
         Returns the per-item results in order.
+
+        Scalar operand *values* may differ between items: batches whose
+        scalars are not all equal take the scalar-batched path
+        (``DISPATCH_STATS.batch_mixed``) — each scalar slot is stacked
+        into one ``(k_items,)`` SMEM vector and every row block indexes
+        its owning item's value inside the kernel, so e.g. sixteen
+        ``scale(s_k, x_k)`` requests with sixteen distinct ``s_k`` still
+        coalesce into ONE launch with bit-identical per-item results.
+        Batches whose scalars are all equal keep the exact pre-existing
+        shared-scalar launch path.
         """
         batch = [tuple(ops) for ops in batch]
         if not batch:
@@ -1007,6 +1106,7 @@ class Program:
         shape = jnp.shape(ref_vecs[0][0])
         dtype = jnp.result_type(ref_vecs[0][0])
         scalars0 = [np.asarray(s) for sc, _ in items[0] for s in sc]
+        mixed = False
         for k, per in enumerate(items[1:], start=1):
             if jnp.shape(ref_vecs[k][0]) != shape:
                 raise ValueError(
@@ -1017,11 +1117,14 @@ class Program:
                 raise ValueError(
                     f"{self.name}: batched items must share a dtype")
             sc_k = [np.asarray(s) for sc, _ in per for s in sc]
-            if any(not np.array_equal(a, b)
-                   for a, b in zip(scalars0, sc_k)):
-                raise ValueError(
-                    f"{self.name}: batched items must share scalar "
-                    f"operand values (item {k} differs)")
+            for a, b in zip(scalars0, sc_k):
+                if a.shape != b.shape or a.dtype != b.dtype:
+                    raise ValueError(
+                        f"{self.name}: batched items must agree on "
+                        f"scalar operand shapes/dtypes (item {k} "
+                        f"differs)")
+                if not np.array_equal(a, b):
+                    mixed = True
 
         n = ref_vecs[0][0].size
         with _trace.span("dispatch", program=self.name, n_elems=int(n),
@@ -1048,20 +1151,36 @@ class Program:
                 return flat.reshape(len(vs) * rows_per_item, block_cols)
 
             # rebuild program operand order: per stage, scalars then
-            # stacked external vectors (scalars come from item 0 —
-            # validated equal).
-            norm = []
-            slot = 0
+            # stacked external vectors. Equal scalars pass through from
+            # item 0 (the exact shared-scalar path); mixed scalars stack
+            # per slot into (k_items, ...) SMEM vectors and the kernel
+            # indexes each row block's owning item (scalar_items = row
+            # blocks per item along the parallel grid axis).
+            scalar_items = rows_per_item // block_rows if mixed else 0
+            scal_slots = [[per[si][0][ki] for per in items]
+                          for si, (sc0, _) in enumerate(items[0])
+                          for ki in range(len(sc0))]
             per_slot = [[per[si][1][vi] for per in items]
                         for si, (_, ext0) in enumerate(items[0])
                         for vi in range(len(ext0))]
+            norm = []
+            slot = 0
+            sslot = 0
             for sc, ext in items[0]:
-                norm.extend(sc)
+                for _ in sc:
+                    if mixed:
+                        norm.append(jnp.stack([
+                            jnp.asarray(v).reshape(-1)
+                            for v in scal_slots[sslot]]))
+                    else:
+                        norm.append(scal_slots[sslot][0])
+                    sslot += 1
                 for _ in ext:
                     norm.append(stack_slot(per_slot[slot]))
                     slot += 1
             out = self.call_blocks(*norm, block_rows=block_rows,
                                    block_cols=block_cols,
+                                   scalar_items=scalar_items,
                                    interpret=interpret)
         outs = out if isinstance(out, (tuple, list)) else (out,)
         # un-stack in O(1) jax ops per output, then view out the items
@@ -1074,6 +1193,8 @@ class Program:
             results.append(per_out[0] if len(per_out) == 1 else per_out)
         DISPATCH_STATS.batch_calls += 1
         DISPATCH_STATS.batch_items += len(batch)
+        if mixed:
+            DISPATCH_STATS.batch_mixed += 1
         if t0 is not None:
             self._notify_observed(results, n, dtype, t0, len(batch))
         return results

@@ -105,7 +105,11 @@ class PartUnit:
 
     ``deps`` are indices into ``plan.parts`` (identical to
     :meth:`Plan.part_deps`); ``predicted_s``/``dram_busy_s`` are ``None``
-    when no Hierarchy was available to simulate the part."""
+    when no Hierarchy was available to simulate the part.
+    ``dram_busy_by_channel`` splits the busy seconds per HBM channel
+    when the hierarchy models more than one (DESIGN.md §18); ``None``
+    on single-channel hierarchies, where ``dram_busy_s`` is the whole
+    story."""
 
     index: int
     name: str
@@ -114,6 +118,7 @@ class PartUnit:
     hbm_bytes: int
     predicted_s: Optional[float] = None
     dram_busy_s: Optional[float] = None
+    dram_busy_by_channel: Optional[tuple[float, ...]] = None
 
 
 @dataclasses.dataclass
@@ -209,14 +214,17 @@ class Plan:
         deps = self.part_deps()
         units = []
         for i, p in enumerate(self.parts):
-            pred_s = busy_s = None
+            pred_s = busy_s = by_ch = None
             if hier is not None:
                 pred = part_prediction(p, n, dt, hier)
                 pred_s, busy_s = pred.time_s, pred.dram_busy_s
+                if pred.dram_channels:
+                    by_ch = pred.dram_busy_by_channel
             units.append(PartUnit(index=i, name=p.name,
                                   node_ids=p.node_ids, deps=deps[i],
                                   hbm_bytes=p.hbm_bytes(n, dt),
-                                  predicted_s=pred_s, dram_busy_s=busy_s))
+                                  predicted_s=pred_s, dram_busy_s=busy_s,
+                                  dram_busy_by_channel=by_ch))
         return tuple(units)
 
     def describe(self) -> str:

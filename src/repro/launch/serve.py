@@ -64,6 +64,15 @@ def main(argv=None):
                    help="scheduling policy with --sched (edf|wfq|fifo)")
     p.add_argument("--sched-trace", default=None, metavar="PATH",
                    help="record the scheduling run as replayable JSONL")
+    p.add_argument("--sched-lanes", type=int, default=1, metavar="N",
+                   help="with --sched: scheduler lane count (decode steps "
+                        "are sequential, so >1 only widens rounds for "
+                        "concurrent tenants)")
+    p.add_argument("--sched-channels", type=int, default=None, metavar="N",
+                   help="with --sched: model N HBM channels — lanes map "
+                        "round-robin onto channels and a round's DRAM "
+                        "demand serialises per channel instead of on one "
+                        "shared interface (DESIGN.md §18)")
     p.add_argument("--slo-ms", type=float, default=50.0,
                    help="per-token latency deadline with --sched")
     p.add_argument("--plan-cache", default=None, metavar="DIR",
@@ -192,9 +201,11 @@ def _decode_scheduled(args, decode, sample_fn, params, cache, tok, rng,
     cost = CostModel()
     recorder = TraceRecorder() if args.sched_trace else None
     sched = Scheduler(queue, cost=cost, policy=args.sched_policy,
-                      n_lanes=1, clock="wall", recorder=recorder,
+                      n_lanes=args.sched_lanes, clock="wall",
+                      recorder=recorder,
                       region_slots=args.region_slots,
-                      region_policy=args.region_policy)
+                      region_policy=args.region_policy,
+                      n_channels=args.sched_channels)
 
     state = {"cache": cache, "tok": tok, "rng": rng}
 

@@ -12,18 +12,22 @@ scoring hot paths use (bit-identical on periodic traces, reference
 fallback otherwise). See DESIGN.md §3 and §12.
 """
 from .fastsim import simulate_fast
-from .hierarchy import (CacheLevel, Hierarchy, LastLevelCache, PAPER_ULTRA96,
-                        PRESETS, TPU_V5E)
-from .predict import (DramStats, LevelStats, Prediction, best_geometry,
-                      contended_makespan, predict_program, simulate,
+from .hierarchy import (CacheLevel, ChannelModel, Hierarchy, LastLevelCache,
+                        PAPER_ULTRA96, PRESETS, TPU_V5E, TPU_V5E_2STACK)
+from .predict import (DramStats, FluidItem, LevelStats, Prediction,
+                      best_geometry, contended_makespan, fluid_finish_times,
+                      fluid_makespan, predict_program, simulate,
                       stream_bandwidth, sweep_llc_blocks)
 from .trace import (Access, demand_bytes, stream_trace, trace_config,
                     trace_program, trace_program_unfused, trace_stage)
 
 __all__ = [
-    "Access", "CacheLevel", "DramStats", "Hierarchy", "LastLevelCache",
+    "Access", "CacheLevel", "ChannelModel", "DramStats", "FluidItem",
+    "Hierarchy", "LastLevelCache",
     "LevelStats", "PAPER_ULTRA96", "PRESETS", "Prediction", "TPU_V5E",
+    "TPU_V5E_2STACK",
     "best_geometry", "contended_makespan", "demand_bytes",
+    "fluid_finish_times", "fluid_makespan",
     "predict_program", "simulate",
     "simulate_fast", "stream_bandwidth", "stream_trace", "sweep_llc_blocks",
     "trace_config", "trace_program", "trace_program_unfused", "trace_stage",

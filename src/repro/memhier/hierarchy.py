@@ -156,16 +156,85 @@ class LastLevelCache(CacheLevel):
 
 
 @dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    """N independent DRAM channels behind the last-level cache
+    (DESIGN.md §18).
+
+    Multi-stack semantics: the hierarchy's ``dram`` :class:`BurstModel`
+    describes ONE channel, so aggregate bandwidth scales with
+    ``n_channels`` — like adding HBM stacks, not like slicing one
+    interface. ``peak_bw`` overrides the per-channel peak (``None``
+    inherits ``dram.peak_bw``); per-burst ``overhead_s`` always comes
+    from ``dram``.
+
+    ``mapping`` places each burst on a channel by its address:
+
+      * ``"interleave"`` — round-robin at ``interleave_bytes``
+        granularity, ``(addr // interleave_bytes) % n_channels``: one
+        stream spreads over all channels (one-item aggregate bandwidth).
+      * ``"pinned"`` — by 1-TiB stream region (the spacing
+        :mod:`repro.memhier.trace` places operand streams at), region
+        ``% n_channels`` unless ``pins`` maps it explicitly: streams /
+        parts own whole channels, so distinct items never collide —
+        the lane→channel story the scheduler builds on.
+    """
+
+    MAPPINGS = ("interleave", "pinned")
+    REGION_BYTES = 1 << 40       # == trace.STREAM_SPACING
+
+    n_channels: int = 1
+    mapping: str = "interleave"
+    interleave_bytes: int = 4096
+    peak_bw: Optional[float] = None
+    pins: Optional[tuple[tuple[int, int], ...]] = None  # (region, channel)
+
+    def __post_init__(self):
+        if self.n_channels <= 0:
+            raise ValueError("n_channels must be positive")
+        if self.mapping not in self.MAPPINGS:
+            raise ValueError(f"unknown channel mapping {self.mapping!r}; "
+                             f"have {self.MAPPINGS}")
+        if self.interleave_bytes <= 0:
+            raise ValueError("interleave_bytes must be positive")
+        for region, ch in self.pins or ():
+            if not (0 <= ch < self.n_channels):
+                raise ValueError(f"pin {region} -> {ch} outside "
+                                 f"{self.n_channels} channels")
+
+    def channel_of(self, addr: int) -> int:
+        """The channel serving a burst at ``addr``."""
+        if self.n_channels == 1:
+            return 0
+        if self.mapping == "interleave":
+            return (addr // self.interleave_bytes) % self.n_channels
+        region = addr // self.REGION_BYTES
+        for r, ch in self.pins or ():
+            if r == region:
+                return ch
+        return region % self.n_channels
+
+    def fingerprint(self) -> tuple:
+        return ("channels", self.n_channels, self.mapping,
+                self.interleave_bytes, self.peak_bw, self.pins)
+
+
+@dataclasses.dataclass(frozen=True)
 class Hierarchy:
     """A stack of cache levels (closest to the core first) over DRAM.
 
     ``dram`` is the existing :class:`BurstModel`: every last-level block
     fill or dirty writeback costs one burst, ``overhead_s + bytes/peak``.
+
+    ``channels`` (optional, DESIGN.md §18) splits DRAM into N
+    independent per-channel interfaces; ``None`` and
+    ``ChannelModel(n_channels=1)`` are modeled identically (the
+    pre-channel single-interface behaviour, bit for bit).
     """
 
     name: str
     levels: tuple[CacheLevel, ...]
     dram: BurstModel
+    channels: Optional[ChannelModel] = None
 
     def __post_init__(self):
         for above, below in zip(self.levels, self.levels[1:]):
@@ -174,6 +243,23 @@ class Hierarchy:
                     f"{self.name}: {below.name} block ({below.block_bytes} B)"
                     f" must hold whole {above.name} blocks "
                     f"({above.block_bytes} B)")
+
+    @property
+    def n_channels(self) -> int:
+        return self.channels.n_channels if self.channels else 1
+
+    def with_channels(self, n_channels: int, mapping: str = "interleave",
+                      interleave_bytes: int = 4096,
+                      peak_bw: Optional[float] = None,
+                      pins=None) -> "Hierarchy":
+        """This hierarchy with an N-channel DRAM (multi-stack semantics:
+        per-channel peak defaults to the full ``dram`` peak, so aggregate
+        bandwidth is ``n_channels ×`` the single-channel preset)."""
+        ch = ChannelModel(n_channels=n_channels, mapping=mapping,
+                          interleave_bytes=interleave_bytes,
+                          peak_bw=peak_bw,
+                          pins=tuple(pins) if pins else None)
+        return dataclasses.replace(self, channels=ch)
 
     def fingerprint(self) -> tuple:
         """Hashable value identifying this hierarchy's modeled behaviour.
@@ -186,10 +272,16 @@ class Hierarchy:
         structurally identical hierarchies share cache entries even
         across distinct objects.
         """
-        return ("hier",
+        base = ("hier",
                 tuple((type(lv).__name__,) + dataclasses.astuple(lv)
                       for lv in self.levels),
                 self.dram.fingerprint())
+        # a 1-channel ChannelModel is modeled identically to channels=None
+        # (the N=1 identity gate), so both share the legacy fingerprint —
+        # and with it every persisted geometry/plan artifact (§14).
+        if self.channels is None or self.channels.n_channels == 1:
+            return base
+        return base + (self.channels.fingerprint(),)
 
     @property
     def dl1(self) -> CacheLevel:
@@ -243,6 +335,8 @@ PAPER_ULTRA96 = Hierarchy(
                        bandwidth=9.6e9, sub_block_bytes=32),
     ),
     dram=PAPER_AXI,
+    # the Ultra96 PS exposes a single DDR4 channel to the PL AXI ports
+    channels=ChannelModel(n_channels=1),
 )
 
 # The TPU v5e analogue: the (8, 128) fp32 tile a kernel body touches per
@@ -261,6 +355,17 @@ TPU_V5E = Hierarchy(
                        bandwidth=1.6e12, sub_block_bytes=4096),
     ),
     dram=TPU_V5E_HBM,
+    # TPU_V5E_HBM's 819 GB/s is the chip's *aggregate* HBM number; the
+    # base preset folds every stack into that one calibrated interface
+    # (n_channels=1 == the pre-channel model, bit for bit).
+    channels=ChannelModel(n_channels=1),
 )
 
-PRESETS = {h.name: h for h in (PAPER_ULTRA96, TPU_V5E)}
+# Scale-out variant (DESIGN.md §18): two HBM stacks, each a full
+# TPU_V5E_HBM interface, streams pinned to stacks by 1-TiB region — the
+# multi-stack geometry bench_channels measures aggregate scaling on.
+TPU_V5E_2STACK = dataclasses.replace(
+    TPU_V5E, name="tpu_v5e_2stack",
+    channels=ChannelModel(n_channels=2, mapping="pinned"))
+
+PRESETS = {h.name: h for h in (PAPER_ULTRA96, TPU_V5E, TPU_V5E_2STACK)}

@@ -103,7 +103,13 @@ class DramStats:
 
 @dataclasses.dataclass
 class Prediction:
-    """Simulation result: time, bandwidth, and the per-level breakdown."""
+    """Simulation result: time, bandwidth, and the per-level breakdown.
+
+    ``dram_channels`` (DESIGN.md §18) is the per-channel split of the
+    DRAM counters when the hierarchy carries a multi-channel
+    :class:`~repro.memhier.hierarchy.ChannelModel`; empty on the
+    single-channel path, where ``dram`` alone is authoritative (bit for
+    bit the pre-channel behaviour)."""
 
     time_s: float
     demand_bytes: int
@@ -112,6 +118,7 @@ class Prediction:
     bottleneck: str
     scale: float = 1.0            # >1 when a capped trace was extrapolated
     n_buffers: float = 2          # overlap depth the timing term assumed
+    dram_channels: tuple[DramStats, ...] = ()
 
     @property
     def effective_bw(self) -> float:
@@ -130,6 +137,22 @@ class Prediction:
         """Full-workload DRAM traffic bytes (window stats × ``scale``)."""
         return int(round(self.scale * self.dram.bytes))
 
+    @property
+    def dram_busy_by_channel(self) -> tuple[float, ...]:
+        """Full-workload DRAM busy seconds per channel (length 1 on the
+        single-channel path, where it equals ``(dram_busy_s,)``)."""
+        if not self.dram_channels:
+            return (self.dram_busy_s,)
+        return tuple(self.scale * c.busy_s for c in self.dram_channels)
+
+    @property
+    def dram_bytes_by_channel(self) -> tuple[int, ...]:
+        """Full-workload DRAM traffic bytes per channel."""
+        if not self.dram_channels:
+            return (self.dram_bytes,)
+        return tuple(int(round(self.scale * c.bytes))
+                     for c in self.dram_channels)
+
     def level(self, name: str) -> LevelStats:
         for st in self.levels:
             if st.name == name:
@@ -138,17 +161,32 @@ class Prediction:
 
 
 class _DramSim:
-    def __init__(self, model):
+    def __init__(self, model, channels=None):
         self.model = model
         self.stats = DramStats()
+        # per-channel integer counters only on genuinely multi-channel
+        # hierarchies: the N=1 path must not even allocate differently,
+        # so the single-channel behaviour stays bit-identical (§18).
+        self.channels = (channels if channels is not None
+                         and channels.n_channels > 1 else None)
+        self.ch = ([DramStats() for _ in range(channels.n_channels)]
+                   if self.channels else None)
 
     def read(self, addr: int, nbytes: int) -> None:
         self.stats.bursts += 1
         self.stats.read_bytes += nbytes
+        if self.ch is not None:
+            c = self.ch[self.channels.channel_of(addr)]
+            c.bursts += 1
+            c.read_bytes += nbytes
 
     def write(self, addr: int, nbytes: int) -> None:
         self.stats.bursts += 1
         self.stats.write_bytes += nbytes
+        if self.ch is not None:
+            c = self.ch[self.channels.channel_of(addr)]
+            c.bursts += 1
+            c.write_bytes += nbytes
 
     def finish(self) -> None:
         # busy time derived from the integer burst/byte counters at the
@@ -156,6 +194,12 @@ class _DramSim:
         # extrapolation reproduces it bit-exactly (DESIGN.md §12).
         self.stats.busy_s = (self.stats.bursts * self.model.overhead_s
                              + self.stats.bytes / self.model.peak_bw)
+        if self.ch is not None:
+            peak = self.channels.peak_bw or self.model.peak_bw
+            for c in self.ch:
+                # the same expression as the aggregate, per channel
+                c.busy_s = (c.bursts * self.model.overhead_s
+                            + c.bytes / peak)
 
 
 class _LevelSim:
@@ -271,7 +315,7 @@ class _LevelSim:
 
 def _build_sims(hier: Hierarchy):
     """Wire up the level sims over DRAM; returns (sims, dram, top)."""
-    dram = _DramSim(hier.dram)
+    dram = _DramSim(hier.dram, getattr(hier, "channels", None))
     below = dram
     sims: list[_LevelSim] = []
     for level in reversed(hier.levels):
@@ -313,7 +357,11 @@ def _prediction(sims, dram, demand: int, n_buffers: int) -> Prediction:
     """Assemble the Prediction from finished sims (shared result path)."""
     dram.finish()
     busy = {st.stats.name: st.stats.busy_s for st in sims}
-    busy["dram"] = dram.stats.busy_s
+    # per-channel hierarchies (§18): channels drain in parallel, so the
+    # DRAM pipeline stage is busy for as long as its *busiest channel*
+    # (the single-channel branch keeps the exact legacy float).
+    busy["dram"] = (max(c.busy_s for c in dram.ch) if dram.ch is not None
+                    else dram.stats.busy_s)
     bottleneck = max(busy, key=busy.get) if busy else "dram"
     if not busy:
         time_s = 0.0
@@ -340,6 +388,7 @@ def _prediction(sims, dram, demand: int, n_buffers: int) -> Prediction:
         dram=dram.stats,
         bottleneck=bottleneck,
         n_buffers=n_buffers,
+        dram_channels=tuple(dram.ch) if dram.ch is not None else (),
     )
 
 
@@ -487,6 +536,130 @@ def contended_makespan(predictions: Sequence[Prediction]) -> float:
     solo = max(p.time_s for p in preds)
     shared_dram = sum(p.dram_busy_s for p in preds)
     return max(solo, shared_dram)
+
+
+# -- per-channel fluid bandwidth sharing (DESIGN.md §18) ----------------------
+
+@dataclasses.dataclass(frozen=True)
+class FluidItem:
+    """One concurrently running workload in the fluid contention model.
+
+    ``time_s`` is the item's solo pipelined time (its non-DRAM critical
+    path — cache ports, compute — which runs on the item's own lane);
+    ``demands`` its DRAM busy seconds per channel. Build one per
+    scheduled batch from an estimate/prediction, placing the DRAM demand
+    on the channel(s) the item's lane is pinned to."""
+
+    time_s: float
+    demands: tuple[float, ...]
+
+    @classmethod
+    def pinned(cls, time_s: float, dram_busy_s: float, channel: int,
+               n_channels: int) -> "FluidItem":
+        """An item whose whole DRAM demand lands on one channel — the
+        scheduler's lane→channel pinning (§18)."""
+        d = [0.0] * n_channels
+        d[channel] = dram_busy_s
+        return cls(time_s=time_s, demands=tuple(d))
+
+    @classmethod
+    def from_prediction(cls, pred: Prediction,
+                        n_channels: Optional[int] = None) -> "FluidItem":
+        """An item carrying the prediction's own per-channel split."""
+        d = pred.dram_busy_by_channel
+        if n_channels is not None and len(d) < n_channels:
+            d = d + (0.0,) * (n_channels - len(d))
+        return cls(time_s=pred.time_s, demands=d)
+
+
+def fluid_makespan(items: Sequence[FluidItem]) -> float:
+    """Makespan of concurrent items under per-channel fluid sharing.
+
+    Each channel is work-conserving and processor-shared: while k items
+    still have demand on a channel they drain at rate 1/k each, and when
+    one finishes its share is released and the survivors speed up.
+    Because a work-conserving channel is never idle while demand
+    remains, its last demand completes exactly at the channel's summed
+    demand — so the round's makespan has the closed form
+
+        max( max_i time_i,  max_c Σ_i demands[i][c] )
+
+    which at one channel is *bit-identical* to
+    :func:`contended_makespan` (same max/sum over the same floats — the
+    N=1 identity gate), and shares its bounds: never below the slowest
+    item, never above the serial sum. What fluid sharing changes is the
+    *per-item* finish times (:func:`fluid_finish_times`), not the
+    round's end.
+    """
+    its = list(items)
+    if not its:
+        return 0.0
+    solo = max(it.time_s for it in its)
+    n_ch = max(len(it.demands) for it in its)
+    busiest = max(
+        (sum(it.demands[c] for it in its if c < len(it.demands))
+         for c in range(n_ch)), default=0.0)
+    return max(solo, busiest)
+
+
+def fluid_finish_times(items: Sequence[FluidItem]) -> list[float]:
+    """Per-item finish times under per-channel fluid sharing (§18).
+
+    Piecewise-constant-rate event loop: between events every channel
+    serves its k active items at rate 1/k; the next event is the first
+    demand to drain, at which point that item's share is released and
+    the survivors' rates step up. An item finishes when both its solo
+    pipeline (``time_s``) and its last channel demand are done; finishes
+    are clamped to :func:`fluid_makespan` so the round's end matches the
+    closed form exactly.
+
+    Versus the rigid :func:`contended_makespan` — where every item in
+    the round is charged the whole makespan — this *strictly tightens*
+    short-item finishes in mixed rounds (a small request coalesced next
+    to a giant one completes early, and its bandwidth share is released
+    to the giant), which is what the scheduler's virtual timeline and
+    deadline accounting consume (``bench_channels`` gates the
+    tightening and the [max, serial-sum] envelope).
+    """
+    its = list(items)
+    if not its:
+        return []
+    n_ch = max(len(it.demands) for it in its)
+    rem = [[it.demands[c] if c < len(it.demands) else 0.0
+            for c in range(n_ch)] for it in its]
+    pending = [sum(1 for d in r if d > 0.0) for r in rem]
+    dram_done = [0.0] * len(its)
+    t = 0.0
+    while True:
+        counts = [0] * n_ch
+        for r in rem:
+            for c in range(n_ch):
+                if r[c] > 0.0:
+                    counts[c] += 1
+        # next event: the first demand to drain at current rates — a
+        # demand d on a channel shared k ways drains in d * k seconds.
+        dt = min((r[c] * counts[c] for r in rem for c in range(n_ch)
+                  if r[c] > 0.0), default=None)
+        if dt is None:
+            break
+        t += dt
+        for i, r in enumerate(rem):
+            for c in range(n_ch):
+                if r[c] <= 0.0:
+                    continue
+                # min achievers hit exactly zero (no fp residue), so
+                # every event retires at least one demand and the loop
+                # terminates in ≤ items × channels steps.
+                if r[c] * counts[c] <= dt:
+                    r[c] = 0.0
+                    pending[i] -= 1
+                    if pending[i] == 0:
+                        dram_done[i] = t
+                else:
+                    r[c] -= dt / counts[c]
+    end = fluid_makespan(its)
+    return [min(max(it.time_s, dram_done[i]), end)
+            for i, it in enumerate(its)]
 
 
 def best_geometry(hier: Hierarchy, program, n_elems: int, dtype):

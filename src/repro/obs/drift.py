@@ -133,6 +133,18 @@ class DriftTracker:
             self._m_exceeded.inc()
         return ratio
 
+    def cell_exceeds(self, key: Any,
+                     threshold: Optional[float] = None) -> bool:
+        """True iff ``key``'s cell is currently past the threshold (≥ 2
+        samples, same rule as the counter) — the O(1) per-observation
+        probe behind the re-negotiation trigger (DESIGN.md §15 action
+        half), where :meth:`exceeding` is the O(cells) report."""
+        thr = threshold if threshold is not None else self.threshold
+        if thr is None:
+            return False
+        cell = self._cells.get(key)
+        return cell is not None and cell.n >= 2 and cell.drift > thr
+
     def exceeding(self, threshold: Optional[float] = None,
                   min_samples: int = 2) -> List[dict]:
         """Cells whose drift exceeds ``threshold`` (defaults to the

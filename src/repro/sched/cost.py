@@ -289,11 +289,22 @@ class CostModel:
         self._persist_ewma(key)
         # raw residual alongside the correction (DESIGN.md §15): the
         # EWMA *adapts to* model error, the drift tracker *reports* it.
+        bucket = _n_bucket(n_elems) if n_elems else 0
+        dt_name = np.dtype(dtype).name if dtype is not None else "none"
         self.drift.record(
             key, modeled, per_item, name=_target_name(target),
-            bucket=_n_bucket(n_elems) if n_elems else 0,
-            dtype=(np.dtype(dtype).name if dtype is not None else "none"),
+            bucket=bucket, dtype=dt_name,
             ewma_ratio=self._ratio.get(key))
+        # the action half of the obs→cost loop (DESIGN.md §15/§18):
+        # chronic drift past the threshold flags the (fingerprint,
+        # bucket, dtype) cell for geometry re-negotiation — the next
+        # dispatch of that shape re-runs the candidate sweep instead of
+        # trusting memos tuned for a machine the model mispredicts.
+        prog = program_of(target)
+        if (prog is not None and self.drift.threshold is not None
+                and self.drift.cell_exceeds(key)):
+            from repro.core.program import request_renegotiation
+            request_renegotiation(prog._identity, bucket, dt_name)
 
     def drift_report(self, top: Optional[int] = None,
                      min_samples: int = 1) -> list:
@@ -349,14 +360,53 @@ class CostModel:
             pop_observed_time_hook(hook)
 
     # -- contention -----------------------------------------------------------
-    def contended_makespan(self, estimates: Sequence[Estimate]) -> float:
+    def contended_makespan(self, estimates: Sequence[Estimate],
+                           channels: Optional[Sequence[int]] = None) -> float:
         """Predicted makespan of concurrently scheduled estimates:
         correction-scaled form of
         :func:`repro.memhier.predict.contended_makespan` — overlapping
-        work is free except the DRAM busy times, which serialise."""
+        work is free except the DRAM busy times, which serialise.
+
+        ``channels`` (DESIGN.md §18) gives each estimate's DRAM channel:
+        busy times then serialise only *within* a channel and the
+        busiest channel sets the DRAM term —
+        :func:`repro.memhier.predict.fluid_makespan` with each item
+        pinned to its lane's channel. ``None`` (or all-equal channels)
+        is the single-interface formula, bit for bit.
+        """
         ests = list(estimates)
         if not ests:
             return 0.0
         solo = max(e.seconds for e in ests)
-        shared = sum(e.dram_busy_s for e in ests)
-        return max(solo, shared)
+        if channels is None:
+            shared = sum(e.dram_busy_s for e in ests)
+            return max(solo, shared)
+        per_ch: dict[int, float] = {}
+        for e, c in zip(ests, channels):
+            per_ch[c] = per_ch.get(c, 0.0) + e.dram_busy_s
+        return max(solo, max(per_ch.values()))
+
+    def fluid_finishes(self, estimates: Sequence[Estimate],
+                       channels: Optional[Sequence[int]] = None,
+                       n_channels: int = 1) -> list[float]:
+        """Per-item finish offsets of one concurrent round under the
+        per-channel fluid sharing model (DESIGN.md §18): each estimate's
+        DRAM demand is pinned to its lane's channel and drains under
+        processor sharing, so short items finish early and release their
+        bandwidth share — :func:`repro.memhier.predict.
+        fluid_finish_times` over the correction-scaled estimates. The
+        max finish equals :meth:`contended_makespan` of the same round.
+        """
+        from repro.memhier.predict import FluidItem, fluid_finish_times
+        ests = list(estimates)
+        if not ests:
+            return []
+        chans = list(channels) if channels is not None else [0] * len(ests)
+        n_ch = max(n_channels, max(chans) + 1)
+        items = [FluidItem.pinned(e.seconds, e.dram_busy_s, c, n_ch)
+                 for e, c in zip(ests, chans)]
+        fins = fluid_finish_times(items)
+        # clamp the round's end to the (bit-stable) rigid closed form so
+        # the virtual clock advances exactly as the makespan promises.
+        end = self.contended_makespan(ests, channels)
+        return [min(f, end) for f in fins]

@@ -10,12 +10,14 @@ tie-break every policy falls back to) and computes the request's
 **coalesce key**.
 
 Coalescing (DESIGN.md §13): requests running the SAME structural program
-with the SAME scalar operand values on vectors of the SAME shape/dtype
-form one batch. That is exactly the precondition for
-:meth:`repro.core.program.Program.call_batch` to stack them into a
-single ``pallas_call`` sharing one warm dispatch (geometry fingerprints
-and the dispatch caches of DESIGN.md §12), so a popped batch costs one
-launch instead of N. Plans, shape-changing programs, and arbitrary
+with scalar operands of the SAME dtypes on vectors of the SAME
+shape/dtype form one batch — scalar *values* may differ, since
+:meth:`repro.core.program.Program.call_batch` stacks mixed scalars into
+per-item SMEM vectors indexed by row block. That is exactly the
+precondition for ``call_batch`` to stack them into a single
+``pallas_call`` sharing one warm dispatch (geometry fingerprints and the
+dispatch caches of DESIGN.md §12), so a popped batch costs one launch
+instead of N. Plans, shape-changing programs, and arbitrary
 callables never coalesce — they batch as singletons.
 
 Observability (DESIGN.md §15): with a tracer active, ``submit`` opens
@@ -64,10 +66,13 @@ def program_of(target) -> Optional[Program]:
 def coalesce_key(target, operands) -> Optional[tuple]:
     """Hashable batch key, or None when the request cannot coalesce.
 
-    The key is (structural program identity, scalar operand values,
+    The key is (structural program identity, scalar operand dtypes,
     vector shape, dtype): two requests with equal keys are guaranteed
     safe to stack into one :meth:`Program.call_batch` launch with
-    bit-identical per-item results.
+    bit-identical per-item results. Scalar *values* are deliberately
+    absent — ``call_batch`` stacks differing values into per-item SMEM
+    vectors (scalar-batched coalescing, DESIGN.md §13), so e.g.
+    ``scale(2.0, x)`` and ``scale(3.0, y)`` share a batch.
     """
     prog = program_of(target)
     if prog is None:
@@ -84,7 +89,7 @@ def coalesce_key(target, operands) -> Optional[tuple]:
             a = np.asarray(s)
             if a.size != 1:
                 return None              # non-scalar "scalar": don't merge
-            scal.append((a.dtype.name, a.item()))
+            scal.append(a.dtype.name)
     vecs = [v for _, ext in per for v in ext]
     if not vecs:
         return None

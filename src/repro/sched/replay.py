@@ -5,7 +5,9 @@ Scheduler` logs one JSON object per line (JSONL, sorted keys — so a
 trace is byte-stable and diffs cleanly):
 
   * ``config`` — policy name, lane count, clock (+ ``region_slots`` /
-    ``region_policy`` when region residency is enabled);
+    ``region_policy`` when region residency is enabled;
+    + ``n_channels`` / ``lane_channels`` on a multi-channel scheduler —
+    single-channel traces stay byte-identical to pre-channel ones);
   * ``submit`` — per item: seq, arrival, deadline, tenant, weight,
     coalesce key (stringified), and the cost model's estimate at
     admission (predicted / modeled / DRAM busy seconds, DRAM bytes;
@@ -13,7 +15,8 @@ trace is byte-stable and diffs cleanly):
   * ``region`` — per residency transition: op (hit / evict / load),
     lane, stringified region key, charged swap seconds, round;
   * ``place``  — per item: lane, round, start/finish, predicted vs
-    observed seconds, coalescing flag.
+    observed seconds, coalescing flag (+ the lane's HBM ``channel`` on
+    a multi-channel scheduler).
 
 :func:`replay` re-runs the *scheduler* (not the kernels) on a recorded
 trace: the submit events reconstruct the arrival sequence, a
@@ -86,7 +89,8 @@ class TraceRecorder:
                           predicted_s=e["predicted_s"],
                           observed_s=e["observed_s"],
                           coalesced=e["coalesced"],
-                          batch_seq=e["batch_seq"])
+                          batch_seq=e["batch_seq"],
+                          channel=e.get("channel", 0))
                 for e in self.of_kind("place")]
 
 
@@ -116,14 +120,17 @@ def replay(trace: TraceRecorder, policy: Optional[str] = None,
            n_lanes: Optional[int] = None,
            recorder: Optional[TraceRecorder] = None,
            region_slots: Optional[int] = None,
-           region_policy: Optional[str] = None) -> Report:
+           region_policy: Optional[str] = None,
+           n_channels: Optional[int] = None) -> Report:
     """Re-run the scheduler over a recorded arrival sequence.
 
-    With no overrides, policy, lane count, and region-residency config
-    come from the trace's ``config`` event and the run must reproduce
-    the recorded placements exactly; pass a different ``policy`` /
-    ``n_lanes`` / ``region_slots`` / ``region_policy`` to ask "what
-    would X have done on this workload" offline.
+    With no overrides, policy, lane count, channel map, and
+    region-residency config come from the trace's ``config`` event and
+    the run must reproduce the recorded placements exactly (including
+    each item's HBM channel on multi-channel traces); pass a different
+    ``policy`` / ``n_lanes`` / ``region_slots`` / ``region_policy`` /
+    ``n_channels`` to ask "what would X have done on this workload"
+    offline.
 
     Traces recorded with regions enabled carry each item's region key
     (stringified) and its pinned reconfiguration cost in the submit
@@ -168,23 +175,33 @@ def replay(trace: TraceRecorder, policy: Optional[str] = None,
 
     region_cost = (PinnedReconfigCost(pinned_costs)
                    if region_slots is not None else None)
+    lanes = n_lanes or cfg["n_lanes"]
+    if n_channels is None:
+        n_channels = cfg.get("n_channels")
+    lane_channels = cfg.get("lane_channels")
+    if lane_channels is not None and len(lane_channels) != lanes:
+        # lane count overridden: the recorded table no longer applies,
+        # fall back to the round-robin map over n_channels.
+        lane_channels = None
     sched = Scheduler(queue, cost=ReplayCost(estimates),
                       policy=policy or cfg["policy"],
-                      n_lanes=n_lanes or cfg["n_lanes"],
+                      n_lanes=lanes,
                       clock="virtual", recorder=recorder,
                       region_slots=region_slots,
                       region_policy=region_policy,
-                      region_cost=region_cost)
+                      region_cost=region_cost,
+                      n_channels=n_channels,
+                      lane_channels=lane_channels)
     return sched.drain()
 
 
 def placements_match(a: Sequence[Placement],
                      b: Sequence[Placement]) -> bool:
     """True iff two placement sequences are identical (the determinism
-    gate's comparison: same items, same lanes, same rounds, same
-    predicted times and virtual start/finish instants)."""
-    sa = [(p.seq, p.lane, p.round, p.start, p.finish, p.predicted_s)
-          for p in a]
-    sb = [(p.seq, p.lane, p.round, p.start, p.finish, p.predicted_s)
-          for p in b]
+    gate's comparison: same items, same lanes, same HBM channels, same
+    rounds, same predicted times and virtual start/finish instants)."""
+    sa = [(p.seq, p.lane, p.channel, p.round, p.start, p.finish,
+           p.predicted_s) for p in a]
+    sb = [(p.seq, p.lane, p.channel, p.round, p.start, p.finish,
+           p.predicted_s) for p in b]
     return sa == sb

@@ -30,6 +30,18 @@ Two clocks:
     cost model, so policies are benchmarkable offline, deterministically
     — the substrate :mod:`repro.sched.replay` records and replays.
 
+Per-channel HBM contention (DESIGN.md §18): each lane maps to one DRAM
+channel (explicit ``lane_channels`` table, round-robin over
+``n_channels``, host-major on a multi-host mesh, or inherited from the
+cost hierarchy's :class:`~repro.memhier.hierarchy.ChannelModel`). A
+round's DRAM busy times then serialise only *within* a channel
+(:meth:`CostModel.contended_makespan` with the lane channels), and the
+virtual clock prices each batch's finish with the fluid bandwidth-
+sharing model (:meth:`CostModel.fluid_finishes`): short batches finish
+when their fair-share drain completes and release their channel's
+bandwidth, instead of waiting out the round. A single-channel
+scheduler keeps the historic whole-round behaviour bit for bit.
+
 Cold starts (DESIGN.md §14): a worker fleet shares ONE persistent
 plan-cache directory — pass ``Scheduler(plan_cache=DIR)`` or export
 ``REPRO_PLAN_CACHE`` before spawning workers — so each program's
@@ -163,7 +175,23 @@ POLICIES = {"fifo": FifoPolicy, "edf": EdfPolicy, "wfq": WeightedFairPolicy}
 # shard_map lane mapping (multi-device meshes)
 # ---------------------------------------------------------------------------
 
-def sharded_program_call(fused, operand_tuples, mesh, axis: str = "parts",
+def _mesh_axes(axis) -> tuple[str, ...]:
+    """Normalise a mesh-axis spec: a single name, or a tuple of names
+    for a multi-host lane mesh (e.g. ``("hosts", "devices")``)."""
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def mesh_lane_count(mesh, axis) -> int:
+    """Lanes a mesh provides over ``axis`` (product across a tuple of
+    axis names — lanes = hosts × devices on a multi-host mesh)."""
+    shape = dict(mesh.shape)
+    n = 1
+    for a in _mesh_axes(axis):
+        n *= shape[a]
+    return n
+
+
+def sharded_program_call(fused, operand_tuples, mesh, axis="parts",
                          chunk_call=None):
     """Run N independent same-structure requests across a device mesh.
 
@@ -175,6 +203,12 @@ def sharded_program_call(fused, operand_tuples, mesh, axis: str = "parts",
     kernel-path callable on TPU). N is padded up to a multiple of the
     axis size by replicating the first request; padding results are
     dropped. Returns the per-request results in order.
+
+    ``axis`` may be a tuple of axis names (a *multi-host lane mesh*,
+    DESIGN.md §18): the stacked parts axis shards over the product of
+    those mesh axes — host-major, so lane ``l`` lives on host
+    ``l // devices_per_host``, matching the scheduler's lane→channel
+    mapping when each host drains its own HBM channel.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -186,7 +220,8 @@ def sharded_program_call(fused, operand_tuples, mesh, axis: str = "parts",
     items = [tuple(ops) for ops in operand_tuples]
     if not items:
         return []
-    n_dev = dict(mesh.shape)[axis]
+    axes = _mesh_axes(axis)
+    n_dev = mesh_lane_count(mesh, axes)
     n_real = len(items)
     pad = (-n_real) % n_dev
     items = items + [items[0]] * pad
@@ -195,6 +230,7 @@ def sharded_program_call(fused, operand_tuples, mesh, axis: str = "parts",
     stacked = [jnp.stack([jnp.asarray(it[k]) for it in items])
                for k in range(n_ops)]
     run_one = chunk_call or fused._ref
+    spec = P(axes[0] if len(axes) == 1 else axes)
 
     def shard_fn(*ops):
         outs = [run_one(*(o[j] for o in ops)) for j in range(chunk)]
@@ -203,8 +239,8 @@ def sharded_program_call(fused, operand_tuples, mesh, axis: str = "parts",
                          for i in range(len(outs[0])))
         return jnp.stack(outs)
 
-    f = shard_map(shard_fn, mesh, in_specs=(P(axis),) * n_ops,
-                  out_specs=P(axis))
+    f = shard_map(shard_fn, mesh, in_specs=(spec,) * n_ops,
+                  out_specs=spec)
     out = f(*stacked)
     if isinstance(out, tuple):
         return [tuple(o[k] for o in out) for k in range(n_real)]
@@ -217,7 +253,12 @@ def sharded_program_call(fused, operand_tuples, mesh, axis: str = "parts",
 
 @dataclasses.dataclass
 class Placement:
-    """One item's scheduling decision + outcome (the replayable record)."""
+    """One item's scheduling decision + outcome (the replayable record).
+
+    ``channel`` is the HBM channel the item's lane drains on (DESIGN.md
+    §18); always 0 on a single-channel scheduler, where it is also
+    omitted from recorded traces (byte-stability with pre-channel
+    traces)."""
 
     seq: int
     lane: int
@@ -228,6 +269,7 @@ class Placement:
     observed_s: float
     coalesced: bool
     batch_seq: int
+    channel: int = 0
 
 
 @dataclasses.dataclass
@@ -247,11 +289,13 @@ class Scheduler:
 
     def __init__(self, queue: RequestQueue, cost: Optional[CostModel] = None,
                  policy: str = "edf", n_lanes: int = 2, mesh=None,
-                 mesh_axis: str = "parts", mode: Optional[str] = None,
+                 mesh_axis="parts", mode: Optional[str] = None,
                  clock: str = "wall", recorder=None, plan_cache=None,
                  region_slots: Optional[int] = None,
                  region_policy: str = "lru", region_cost=None,
-                 region_file: Optional[RegionFile] = None):
+                 region_file: Optional[RegionFile] = None,
+                 n_channels: Optional[int] = None,
+                 lane_channels: Optional[Sequence[int]] = None):
         if clock not in ("wall", "virtual"):
             raise ValueError(f"clock must be 'wall' or 'virtual', got "
                              f"{clock!r}")
@@ -274,8 +318,9 @@ class Scheduler:
         self.cost = cost if cost is not None else CostModel()
         self.mesh = mesh
         self.mesh_axis = mesh_axis
-        self.n_lanes = (dict(mesh.shape)[mesh_axis] if mesh is not None
+        self.n_lanes = (mesh_lane_count(mesh, mesh_axis) if mesh is not None
                         else max(1, int(n_lanes)))
+        self._init_channels(n_channels, lane_channels)
         self.mode = mode
         self.clock = clock
         self.recorder = recorder
@@ -309,7 +354,56 @@ class Scheduler:
             if self.regions is not None:
                 cfg.update(region_slots=self.regions.slots_cfg,
                            region_policy=self.regions.policy_name)
+            if self.n_channels > 1:
+                # only multi-channel configs carry channel fields, so a
+                # single-channel trace stays byte-identical to pre-
+                # channel recordings (the replay identity gate).
+                cfg.update(n_channels=self.n_channels,
+                           lane_channels=list(self.lane_channels))
             recorder.record("config", **cfg)
+
+    def _init_channels(self, n_channels: Optional[int],
+                       lane_channels: Optional[Sequence[int]]) -> None:
+        """Resolve the lane→HBM-channel map (DESIGN.md §18).
+
+        Source priority: an explicit ``lane_channels`` table > an
+        explicit ``n_channels`` (round-robin ``lane % n``) > a
+        multi-host mesh (host-major: each host drains its own channel)
+        > the cost model hierarchy's :class:`~repro.memhier.hierarchy.
+        ChannelModel` > single-channel. The result feeds the round's
+        per-channel contended makespan and fluid finish times.
+        """
+        if lane_channels is not None:
+            table = [int(c) for c in lane_channels]
+            if len(table) != self.n_lanes:
+                raise ValueError(
+                    f"lane_channels has {len(table)} entries for "
+                    f"{self.n_lanes} lanes")
+            if any(c < 0 for c in table):
+                raise ValueError("lane_channels entries must be >= 0")
+            self.lane_channels = table
+            self.n_channels = max(max(table) + 1,
+                                  int(n_channels or 1))
+            return
+        if n_channels is not None:
+            n_ch = max(1, int(n_channels))
+        else:
+            axes = _mesh_axes(self.mesh_axis)
+            if self.mesh is not None and len(axes) > 1:
+                # multi-host lane mesh: lanes are host-major (matching
+                # sharded_program_call), each host's HBM is a channel.
+                n_ch = dict(self.mesh.shape)[axes[0]]
+                per_host = self.n_lanes // max(n_ch, 1)
+                self.n_channels = max(1, n_ch)
+                self.lane_channels = [l // max(per_host, 1)
+                                      for l in range(self.n_lanes)]
+                return
+            hier = self.cost.hierarchy
+            n_ch = int(getattr(hier, "n_channels", 1)) if hier is not None \
+                else 1
+        self.n_channels = max(1, n_ch)
+        self.lane_channels = [l % self.n_channels
+                              for l in range(self.n_lanes)]
 
     # -- clocks ---------------------------------------------------------------
     def now(self) -> float:
@@ -404,7 +498,8 @@ class Scheduler:
         if hier is None:
             return None
         key = (plan.graph.name, tuple(plan.chains()), plan.n_elems,
-               str(plan.dtype), self.n_lanes, _model_fingerprint(hier))
+               str(plan.dtype), self.n_lanes, _model_fingerprint(hier),
+               self.n_channels, tuple(self.lane_channels))
         if key in self._plan_durations:
             return self._plan_durations[key]
         d = self._plan_duration_uncached(plan, hier)
@@ -423,7 +518,9 @@ class Scheduler:
                                  dram_bytes=units[i].hbm_bytes,
                                  source="plan")
                         for i in chunk]
-                total += self.cost.contended_makespan(ests)
+                chans = (self.lane_channels[:len(chunk)]
+                         if self.n_channels > 1 else None)
+                total += self.cost.contended_makespan(ests, chans)
         return total
 
     def _region_key(self, item: WorkItem) -> tuple:
@@ -474,25 +571,41 @@ class Scheduler:
     def _run_round(self, round_batches: list[Batch]) -> None:
         start = self.now()
         lanes, charges = self._assign_lanes(round_batches, start)
+        chans = [self.lane_channels[l] for l in lanes]
+        channels = chans if self.n_channels > 1 else None
         ests = [self._batch_estimate(b) for b in round_batches]
         if any(charges):
             # the swap penalty serialises ahead of the batch's own work
             # on its lane, so it joins the round's contended makespan
             ests = [dataclasses.replace(e, seconds=e.seconds + c)
                     for e, c in zip(ests, charges)]
-        makespan = self.cost.contended_makespan(ests)
+        makespan = self.cost.contended_makespan(ests, channels)
 
         tr = _trace.ACTIVE
         if self.clock == "virtual":
-            observed = [makespan] * len(round_batches)
+            if channels is not None:
+                # per-channel fluid sharing (DESIGN.md §18): short
+                # batches finish when their channel's fair-share drain
+                # completes instead of waiting out the round; the
+                # round's end (and the clock step) is still the rigid
+                # closed-form makespan, which fluid_finishes clamps to.
+                fins = self.cost.fluid_finishes(
+                    ests, channels, n_channels=self.n_channels)
+                observed = list(fins)
+                finishes = [start + f for f in fins]
+            else:
+                # single channel keeps the historic whole-round finish
+                # bit for bit (trace byte-stability with old recordings).
+                observed = [makespan] * len(round_batches)
+                finishes = [start + makespan] * len(round_batches)
             results = [[None] * len(b.items) for b in round_batches]
-            finishes = [start + makespan] * len(round_batches)
             if tr is not None:
-                for lane, b in zip(lanes, round_batches):
+                for lane, ch, b in zip(lanes, chans, round_batches):
+                    extra = {"channel": ch} if channels is not None else {}
                     with tr.span("placement", parent=b.items[0].span,
                                  lane=lane, round=self._round,
                                  batch_seq=b.seq, n_items=len(b.items),
-                                 virtual=True):
+                                 virtual=True, **extra):
                         pass
         else:
             observed, results, finishes = [], [], []
@@ -522,8 +635,8 @@ class Scheduler:
                                   n_items=len(b.items),
                                   cost_key=it0.cost_key)
 
-        for lane, b, outs, obs, fin in zip(
-                lanes, round_batches, results, observed, finishes):
+        for lane, ch, b, outs, obs, fin in zip(
+                lanes, chans, round_batches, results, observed, finishes):
             for it, out in zip(b.items, outs):
                 it.result = out
                 it.predicted_s = self._estimate(it).seconds
@@ -544,14 +657,16 @@ class Scheduler:
                     seq=it.seq, lane=lane, round=self._round, start=start,
                     finish=fin, predicted_s=it.predicted_s,
                     observed_s=it.observed_s, coalesced=b.coalesced,
-                    batch_seq=b.seq))
+                    batch_seq=b.seq, channel=ch))
                 if self.recorder is not None:
+                    extra = ({"channel": ch} if self.n_channels > 1
+                             else {})
                     self.recorder.record(
                         "place", seq=it.seq, lane=lane, round=self._round,
                         start=start, finish=fin,
                         predicted_s=it.predicted_s,
                         observed_s=it.observed_s,
-                        coalesced=b.coalesced, batch_seq=b.seq)
+                        coalesced=b.coalesced, batch_seq=b.seq, **extra)
         if self.clock == "virtual":
             self._now = start + makespan
         self._round += 1

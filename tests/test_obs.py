@@ -449,6 +449,44 @@ class TestDrift:
         assert cell["samples"] == 1 and cell["mean_ratio"] > 0
 
 
+class TestDriftAction:
+    """Observe→act loop (ISSUE 9): a cell that chronically exceeds the
+    drift threshold forces a fresh geometry sweep on its next dispatch
+    (DISPATCH_STATS.drift_renegotiated), consuming the flag."""
+
+    def test_chronic_drift_renegotiates_next_dispatch(self):
+        prog_mod.clear_dispatch_caches()
+        prog_mod.reset_dispatch_stats()
+        cost = CostModel(hierarchy=TPU_V5E, drift_threshold=0.4)
+        fused = isa.fuse("c0_scale", "c0_add")
+        ops_ = _operands()
+        fused(*ops_, mode="interpret")              # warm geometry memo
+        base = prog_mod.DISPATCH_STATS.drift_renegotiated
+        est = cost.estimate(fused, n_elems=5000, dtype=F32)
+        for _ in range(2):                          # chronic, not one-off
+            cost.observe(fused, n_elems=5000, dtype=F32,
+                         seconds=est.modeled_s * 10)
+        fused(*ops_, mode="interpret")              # flagged shape re-sweeps
+        assert prog_mod.DISPATCH_STATS.drift_renegotiated == base + 1
+        fused(*ops_, mode="interpret")              # flag consumed: no loop
+        assert prog_mod.DISPATCH_STATS.drift_renegotiated == base + 1
+
+    def test_no_threshold_no_renegotiation(self):
+        prog_mod.clear_dispatch_caches()
+        prog_mod.reset_dispatch_stats()
+        cost = CostModel(hierarchy=TPU_V5E)         # reporting only
+        fused = isa.fuse("c0_scale", "c0_add")
+        ops_ = _operands()
+        fused(*ops_, mode="interpret")
+        base = prog_mod.DISPATCH_STATS.drift_renegotiated
+        est = cost.estimate(fused, n_elems=5000, dtype=F32)
+        for _ in range(3):
+            cost.observe(fused, n_elems=5000, dtype=F32,
+                         seconds=est.modeled_s * 10)
+        fused(*ops_, mode="interpret")
+        assert prog_mod.DISPATCH_STATS.drift_renegotiated == base
+
+
 # ---------------------------------------------------------------------------
 # Plan-cache GC (satellite a)
 # ---------------------------------------------------------------------------

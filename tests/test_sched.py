@@ -85,11 +85,15 @@ class TestQueue:
         k2 = coalesce_key(fused, (2.0, b, x))      # same shapes/scalars
         assert k1 == k2 and k1 is not None
 
-    def test_coalesce_key_splits_on_scalars_shape_dtype(self):
+    def test_coalesce_key_splits_on_shape_dtype_not_scalar_values(self):
         fused = isa.fuse("c0_scale", "c0_add")
         x, b = vecs(0, 1)
         base = coalesce_key(fused, (2.0, x, b))
-        assert coalesce_key(fused, (3.0, x, b)) != base
+        # scalar VALUES no longer split the key: call_batch stacks mixed
+        # scalars into per-item SMEM vectors (scalar-batched coalescing)
+        assert coalesce_key(fused, (3.0, x, b)) == base
+        # scalar dtype still splits (the stacked SMEM vector is typed)
+        assert coalesce_key(fused, (jnp.float32(2.0), x, b)) != base
         y = vecs(2, n=2 * N)
         assert coalesce_key(fused, (2.0, y, vecs(3, n=2 * N))) != base
         xi = jnp.asarray(np.arange(N), jnp.int32)
@@ -158,11 +162,33 @@ class TestCallBatch:
             assert w.delta("batch_calls") == 1
             assert w.delta("batch_items") == 2
 
-    def test_mismatched_scalars_rejected(self, fresh_caches):
+    def test_mixed_scalars_coalesce_bit_identical(self, fresh_caches):
+        prog = isa.fuse("c0_scale", "c0_add").program
+        x, b = vecs(0, 1)
+        with prog_mod.dispatch_stats_window() as w:
+            outs = prog.call_batch([(2.0, x, b), (3.0, x, b)],
+                                   interpret=True)
+        assert w.delta("batch_calls") == 1
+        assert w.delta("batch_mixed") == 1
+        for s, out in zip((2.0, 3.0), outs):
+            ref = prog(s, x, b, interpret=True)
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.asarray(ref))
+
+    def test_uniform_scalars_keep_shared_path(self, fresh_caches):
+        prog = isa.fuse("c0_scale", "c0_add").program
+        x, b = vecs(0, 1)
+        with prog_mod.dispatch_stats_window() as w:
+            prog.call_batch([(2.0, x, b), (2.0, x, b)], interpret=True)
+        assert w.delta("batch_calls") == 1
+        assert w.delta("batch_mixed") == 0
+
+    def test_mismatched_scalar_dtypes_rejected(self, fresh_caches):
         prog = isa.fuse("c0_scale", "c0_add").program
         x, b = vecs(0, 1)
         with pytest.raises(ValueError, match="scalar"):
-            prog.call_batch([(2.0, x, b), (3.0, x, b)], interpret=True)
+            prog.call_batch([(np.float64(2.0), x, b),
+                             (np.float32(3.0), x, b)], interpret=True)
 
     def test_mismatched_shapes_rejected(self, fresh_caches):
         prog = isa.fuse("c0_copy").program
@@ -356,10 +382,11 @@ class TestScheduler:
         q = RequestQueue()
         scale = isa.fuse("c0_scale")
         x = vecs(0)
-        # distinct scalar values → distinct coalesce keys → 3 batches
-        late = q.submit(scale, (2.0, x), deadline=9.0)
-        none = q.submit(scale, (3.0, vecs(1)))
-        soon = q.submit(scale, (4.0, vecs(2)), deadline=1.0)
+        # distinct scalar dtypes → distinct coalesce keys → 3 batches
+        # (values alone no longer split — scalar-batched coalescing)
+        late = q.submit(scale, (np.float64(2.0), x), deadline=9.0)
+        none = q.submit(scale, (np.float32(3.0), vecs(1)))
+        soon = q.submit(scale, (np.int32(4), vecs(2)), deadline=1.0)
         rep = Scheduler(q, cost=CostModel(hierarchy=TPU_V5E), policy="edf",
                         n_lanes=1, clock="virtual").drain()
         order = [p.seq for p in sorted(rep.placements,
@@ -369,9 +396,11 @@ class TestScheduler:
     def test_wfq_prefers_heavier_tenant(self):
         q = RequestQueue()
         scale = isa.fuse("c0_scale")
-        # distinct scalars → no coalescing; identical service size
-        a = q.submit(scale, (2.0, vecs(0)), tenant="light", weight=1.0)
-        b = q.submit(scale, (3.0, vecs(1)), tenant="heavy", weight=4.0)
+        # distinct scalar dtypes → no coalescing; identical service size
+        a = q.submit(scale, (np.float64(2.0), vecs(0)), tenant="light",
+                     weight=1.0)
+        b = q.submit(scale, (np.float32(3.0), vecs(1)), tenant="heavy",
+                     weight=4.0)
         rep = Scheduler(q, cost=CostModel(hierarchy=TPU_V5E), policy="wfq",
                         n_lanes=1, clock="virtual").drain()
         first = min(rep.placements, key=lambda p: p.round)
