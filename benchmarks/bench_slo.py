@@ -1,0 +1,359 @@
+"""SLO / blame / tail-sampling gates (DESIGN.md §19).
+
+Three gate families over the ``repro.obs`` analysis tier:
+
+  * **Blame conservation + byte-stable export** — a virtual-clock run
+    built to exercise every blame bucket at once (coalesced batches,
+    bounded region slots, two HBM channels, round overflow) must
+    decompose every request's latency into buckets that sum to
+    ``finish − arrival`` within 1e-9, and the blame JSONL exported from
+    the live run must be byte-identical to the one exported from
+    replaying its recorded trace — blame is a property of the workload,
+    not of which run produced it.
+  * **Tail retention** — on a bursty single-lane mix where ~40% of
+    requests breach their SLO, the tail sampler at a 1% baseline rate
+    must retain 100% of the SLO-breaching trees, while plain head
+    sampling at the same 1% rate retains < 10% of them: the
+    keep-decision has to move to the root's *finish*, where latency is
+    known.
+  * **Shed loop** — a two-tenant overload mix (a steady tenant at half
+    utilisation, a burst tenant flooding 8× capacity for a window).
+    With ``--slo-shed`` semantics on, the burn-rate monitor must
+    identify exactly the burning tenant (only ITS arrivals are shed)
+    and the protected tenant's p99 wait must improve vs the shed-off
+    run.  Arrivals are submitted in chronological 1 ms chunks with a
+    drain between chunks, so admission decisions see only completions
+    that exist by then — the same causality serve.py's loop has.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import isa
+from repro.kernels import ops  # noqa: F401 — registers the ISA
+from repro.memhier import TPU_V5E
+from repro.obs import critical
+from repro.obs import metrics as _metrics
+from repro.obs.slo import SloMonitor, SloShedder
+from repro.obs.tail import TailSampler
+from repro.obs.trace import Tracer, VirtualClock, using_tracer
+from repro.regions import PinnedReconfigCost
+from repro.sched import (CostModel, RequestQueue, Scheduler, TraceRecorder,
+                         placements_match, replay)
+
+from .common import row
+
+CONSERVATION_TOL = 1e-9
+
+# -- gate 1: blame conservation + byte-stable record/replay export ----
+
+N = 1 << 13
+N_WAVES = 3
+WAVE_PERIOD = 2e-3
+SWAP_COST_S = 1e-3
+
+
+def _blame_programs():
+    """Six structurally distinct regions so 4 lanes × 1 slot thrash."""
+    return [isa.fuse("c0_scale", "c0_add"),    # hot, coalesces ×3
+            isa.fuse("c0_add"),
+            isa.fuse("c0_copy"),
+            isa.fuse("c0_triad"),
+            isa.fuse("c0_scale"),
+            isa.fuse("c0_scale", "c0_copy")]
+
+
+def _probe_operands(prog, scalar, x, b):
+    """Operand tuple in the program's per-stage (scalars, ext-vectors)
+    order — the :meth:`Program.split_operands` convention."""
+    out, vecs, vi = [], (x, b, x, b), 0
+    for st, ne in zip(prog.stages, prog._n_ext):
+        out.extend([scalar] * st.n_scalar_in)
+        for _ in range(ne):
+            out.append(vecs[vi])
+            vi += 1
+    return tuple(out)
+
+
+def _submit_blame_mix(q: RequestQueue) -> None:
+    progs = _blame_programs()
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal(N), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(N), jnp.float32)
+    for w in range(N_WAVES):
+        t = w * WAVE_PERIOD
+        # three hot requests with distinct scalar VALUES: same coalesce
+        # key, one stacked launch — the coalesce blame bucket
+        for j in range(3):
+            q.submit(progs[0], _probe_operands(progs[0].program,
+                                               2.0 + w + 0.125 * j, x, b),
+                     arrival=t, tenant="hot")
+        # five singleton programs, rotated so regions migrate across
+        # lanes and the 1-slot lanes evict (region_swap bucket); eight
+        # batches over four lanes also forces a second round per wave
+        # (queue_wait bucket) with two batches per channel
+        # (channel_contention bucket)
+        for j in range(1, len(progs)):
+            p = progs[(j + w) % len(progs)]
+            if p is progs[0]:
+                p = progs[w % len(progs)] if w % len(progs) != 0 \
+                    else progs[3]
+            q.submit(p, _probe_operands(p.program, 3.0 + w + j, x, b),
+                     arrival=t, tenant=f"t{j % 2}")
+
+
+def _run_blame(tracer: Tracer, recorder=None):
+    with using_tracer(tracer):
+        q = RequestQueue()
+        _submit_blame_mix(q)
+        sched = Scheduler(q, cost=CostModel(hierarchy=TPU_V5E),
+                          policy="fifo", n_lanes=4, n_channels=2,
+                          clock="virtual", recorder=recorder,
+                          region_slots=1,
+                          region_cost=PinnedReconfigCost(
+                              {}, default_s=SWAP_COST_S))
+        rep = sched.drain()
+    return rep
+
+
+def _check_blame() -> None:
+    tr = Tracer(clock=VirtualClock())
+    rec = TraceRecorder()
+    rep = _run_blame(tr, recorder=rec)
+    blames = critical.attribute(tr)
+    n_requests = 3 * N_WAVES + 5 * N_WAVES
+    assert len(blames) == n_requests, (
+        f"expected {n_requests} blamed requests, got {len(blames)}")
+
+    res = critical.max_residual(blames)
+    assert res <= CONSERVATION_TOL, (
+        f"blame buckets do not conserve: max residual {res:.3e}s "
+        f"> {CONSERVATION_TOL}")
+    totals = {k: sum(b.buckets[k] for b in blames)
+              for k in critical.BUCKETS}
+    for bucket in ("queue_wait", "region_swap", "coalesce",
+                   "channel_contention", "compute"):
+        assert totals[bucket] > 0.0, (
+            f"the mix never exercised the {bucket!r} bucket: {totals}")
+    for bucket in ("negotiate", "pallas_build"):
+        assert totals[bucket] == 0.0, (
+            f"virtual-clock runs must not carve {bucket!r} from span "
+            f"timestamps (synthetic clock): {totals[bucket]}")
+    for b in blames:
+        assert b.critical_path[0] == "request"
+        assert len(b.critical_path) >= 2, (
+            f"request {b.seq} has a bare critical path")
+    # placement spans hang off each batch LEADER's root (coalesced
+    # followers share the leader's placement), so at least every
+    # singleton's path must surface one
+    with_placement = sum("placement" in b.critical_path for b in blames)
+    assert with_placement >= 5 * N_WAVES, (
+        f"only {with_placement} critical paths reach a placement span")
+
+    live = critical.export_jsonl(blames)
+    # replay the recorded trace under a FRESH tracer: same placements,
+    # same blame inputs, byte-identical export
+    tr2 = Tracer(clock=VirtualClock())
+    loaded = TraceRecorder.loads(rec.dumps())
+    with using_tracer(tr2):
+        rep2 = replay(loaded)
+    assert placements_match(rep.placements, rep2.placements), (
+        "replay diverged from the live placements")
+    replayed = critical.export_jsonl(critical.attribute(tr2))
+    assert replayed == live, (
+        "blame JSONL is not byte-stable across record/replay")
+
+    row("slo_blame_makespan_us", rep.makespan * 1e6,
+        f"residual_ns:{res * 1e9:.3f}_conserved:{len(blames)}req")
+    row("slo_blame_export_bytes", float(len(live)),
+        "record_replay_byte_identical")
+
+
+# -- gate 2: tail sampler vs head sampling on SLO breaches ------------
+
+TAIL_SLO_S = 4e-3
+TAIL_N = 60
+TAIL_PERIOD = 2e-3
+TAIL_BURST = 8
+TAIL_RATE = 0.01
+
+
+def _submit_tail_mix(q: RequestQueue) -> None:
+    """Steady arrivals with periodic 9-deep bursts on one lane: burst
+    members queue behind each other and breach the 4 ms SLO."""
+    for k in range(TAIL_N):
+        t = k * TAIL_PERIOD
+        q.submit((lambda: None), (), arrival=t, tenant="api",
+                 cost_key=("svc", "api"))
+        if k % 20 == 10:
+            for _ in range(TAIL_BURST):
+                q.submit((lambda: None), (), arrival=t, tenant="api",
+                         cost_key=("svc", "api"))
+
+
+def _run_tail(tracer: Tracer):
+    with using_tracer(tracer):
+        q = RequestQueue()
+        _submit_tail_mix(q)
+        sched = Scheduler(q, cost=CostModel(default_s=1e-3),
+                          policy="fifo", n_lanes=1, clock="virtual")
+        rep = sched.drain()
+    return rep
+
+
+def _breaching_seqs(rep, arrivals) -> set:
+    return {p.seq for p in rep.placements
+            if p.finish - arrivals[p.seq] > TAIL_SLO_S}
+
+
+def _check_tail() -> None:
+    # head-sampled baseline: keep decision at root START, rate 1%
+    head_tr = Tracer(clock=VirtualClock(), sample_rate=TAIL_RATE)
+    rep = _run_tail(head_tr)
+    # arrivals recomputed from the mix definition (tracer-independent)
+    arrivals = {}
+    seq = 0
+    for k in range(TAIL_N):
+        t = k * TAIL_PERIOD
+        arrivals[seq] = t
+        seq += 1
+        if k % 20 == 10:
+            for _ in range(TAIL_BURST):
+                arrivals[seq] = t
+                seq += 1
+    breachers = _breaching_seqs(rep, arrivals)
+    assert breachers, "tail mix produced no SLO breaches"
+    head_kept = {s.attrs["seq"] for s in head_tr.spans
+                 if s.name == "request"}
+    head_frac = len(head_kept & breachers) / len(breachers)
+    assert head_frac < 0.10, (
+        f"head sampling at {TAIL_RATE} kept {head_frac:.0%} of "
+        f"breaching trees — the premise of tail sampling is that it "
+        f"keeps almost none")
+
+    # tail-sampled run: identical workload, decision at root FINISH
+    tail_tr = Tracer(clock=VirtualClock())
+    sampler = TailSampler(tail_tr, ring=16, sample_rate=TAIL_RATE,
+                          slo_s=TAIL_SLO_S)
+    rep2 = _run_tail(tail_tr)
+    assert placements_match(rep.placements, rep2.placements), (
+        "sampling mode changed the schedule")
+    kept_seqs = {r.attrs["seq"] for r in sampler.kept_roots()}
+    missed = breachers - kept_seqs
+    assert not missed, (
+        f"tail sampler lost {len(missed)}/{len(breachers)} "
+        f"SLO-breaching trees: seqs {sorted(missed)[:5]}...")
+    st = sampler.stats()
+    assert st["by_reason"]["slo"] == len(breachers), (
+        f"expected every breacher kept for reason 'slo': {st}")
+
+    # determinism: an identical run exports identical bytes
+    tr3 = Tracer(clock=VirtualClock())
+    s3 = TailSampler(tr3, ring=16, sample_rate=TAIL_RATE,
+                     slo_s=TAIL_SLO_S)
+    _run_tail(tr3)
+    assert s3.export_jsonl() == sampler.export_jsonl(), (
+        "tail-sampler export is not deterministic under the virtual "
+        "clock")
+
+    row("slo_tail_breach_retention_pct", 100.0,
+        f"head_kept:{head_frac * 100:.1f}pct_at_rate:{TAIL_RATE}")
+    row("slo_tail_kept_trees", float(st["kept"]),
+        f"of:{st['seen']}_evicted:{st['evicted']}")
+
+
+# -- gate 3: burn-rate shed protects the steady tenant ----------------
+
+SVC_S = 1e-3          # per-request service time (1× capacity at 1/ms)
+STEADY_N = 60
+STEADY_PERIOD = 2e-3  # half utilisation on its own
+BURST_T0 = 30e-3
+BURST_N = 80
+BURST_PERIOD = 0.125e-3  # 8× capacity while flooding
+CHUNK_S = 1e-3
+
+
+def _shed_arrivals():
+    arr = [(k * STEADY_PERIOD, "steady") for k in range(STEADY_N)]
+    arr += [(BURST_T0 + i * BURST_PERIOD, "burner") for i in range(BURST_N)]
+    arr.sort()
+    return arr
+
+
+def _run_shed(shed: bool):
+    mon = SloMonitor(threshold=2.0)
+    mon.add("steady", target_s=20e-3, objective=0.9,
+            fast_s=10e-3, slow_s=200e-3)
+    mon.add("burner", target_s=5e-3, objective=0.9,
+            fast_s=10e-3, slow_s=200e-3)
+    q = RequestQueue(admission=SloShedder(mon) if shed else None)
+    sched = Scheduler(q, cost=CostModel(default_s=SVC_S), policy="fifo",
+                      n_lanes=1, clock="virtual", slo=mon)
+    tenants: dict[int, str] = {}
+    arrivals: dict[int, float] = {}
+    shed_counts = {"steady": 0, "burner": 0}
+    burning_seen: set = set()
+    pending = _shed_arrivals()
+    i = 0
+    while i < len(pending):
+        chunk_end = pending[i][0] + CHUNK_S
+        while i < len(pending) and pending[i][0] < chunk_end:
+            t, tenant = pending[i]
+            it = q.submit((lambda: None), (), arrival=t, tenant=tenant,
+                          cost_key=("svc", tenant))
+            if it.shed:
+                shed_counts[tenant] += 1
+            else:
+                tenants[it.seq] = tenant
+                arrivals[it.seq] = t
+            i += 1
+        sched.drain()
+        burning_seen |= set(mon.burning())
+    waits = {"steady": [], "burner": []}
+    for p in sched.placements:
+        waits[tenants[p.seq]].append(p.finish - arrivals[p.seq])
+    p99 = {t: sorted(w)[min(len(w) - 1, int(0.99 * len(w)))] if w else 0.0
+           for t, w in waits.items()}
+    return p99, waits, shed_counts, burning_seen
+
+
+def _check_shed() -> None:
+    p99_off, waits_off, sheds_off, _ = _run_shed(shed=False)
+    p99_on, waits_on, sheds_on, burning = _run_shed(shed=True)
+
+    assert sheds_off == {"steady": 0, "burner": 0}
+    assert burning == {"burner"}, (
+        f"burn-rate monitor misidentified the burning tenant: "
+        f"{burning}")
+    assert sheds_on["burner"] > 0, "no burner arrivals were shed"
+    assert sheds_on["steady"] == 0, (
+        f"protected tenant lost {sheds_on['steady']} arrivals to "
+        f"shedding")
+    assert len(waits_on["steady"]) == STEADY_N, (
+        "shedding changed the protected tenant's completion count")
+    assert p99_on["steady"] < p99_off["steady"], (
+        f"shed-on steady p99 ({p99_on['steady']:.3e}s) did not improve "
+        f"on shed-off ({p99_off['steady']:.3e}s)")
+    # the queue-side counter agrees with the run's own accounting
+    shed_metric = _metrics.REGISTRY.counter(
+        "repro_sched_shed_total",
+        help="arrivals rejected by the SLO admission hook",
+        labels={"tenant": "burner"})
+    assert shed_metric.value >= sheds_on["burner"]
+
+    row("slo_shed_steady_p99_us", p99_on["steady"] * 1e6,
+        f"off:{p99_off['steady'] * 1e6:.0f}us_win:"
+        f"{p99_off['steady'] / max(p99_on['steady'], 1e-12):.1f}x")
+    row("slo_shed_burner_shed", float(sheds_on["burner"]),
+        f"of:{BURST_N}_steady_shed:0")
+
+
+def main() -> None:
+    _check_blame()
+    _check_tail()
+    _check_shed()
+
+
+if __name__ == "__main__":
+    main()

@@ -49,8 +49,8 @@ def main() -> None:
     from . import (bench_aot, bench_blocksweep, bench_channels,
                    bench_core_overhead, bench_fusion, bench_graph,
                    bench_hotpath, bench_memhier, bench_obs, bench_opcount,
-                   bench_prefix, bench_regions, bench_sched, bench_sort,
-                   bench_stream)
+                   bench_prefix, bench_regions, bench_sched, bench_slo,
+                   bench_sort, bench_stream)
     suites = {
         "fig3_blocksweep": bench_blocksweep.main,
         "fig4_stream": bench_stream.main,
@@ -67,6 +67,7 @@ def main() -> None:
         "sec15_obs": bench_obs.main,
         "sec16_regions": bench_regions.main,
         "sec18_channels": bench_channels.main,
+        "sec19_slo": bench_slo.main,
     }
     if args.only and not any(args.only in name for name in suites):
         print(f"--only {args.only!r} matches no suite; have "

@@ -21,6 +21,14 @@ final state; CI's smoke step curls it). ``--obs-trace PATH`` activates the
 span tracer and writes the run's Chrome-trace/Perfetto JSON to PATH,
 and a modeled-vs-observed drift report is printed after a ``--sched``
 run when any completions were recorded.
+
+Analysis tier (DESIGN.md §19): ``--obs-tail PATH`` keeps every
+SLO-breaching / erroring / p99 request tree at a 1% baseline rate and
+writes them to PATH; ``--slo-shed`` closes the SLO loop — completions
+feed per-tenant burn-rate windows and a burning tenant's new arrivals
+are shed at admission; with a tracer active a per-tenant blame report
+(queue-wait / swap / coalesce / contention / compute) is printed after
+the run.
 """
 from __future__ import annotations
 
@@ -93,6 +101,19 @@ def main(argv=None):
                    help="activate the span tracer and write the run's "
                         "Chrome-trace JSON to PATH (open in Perfetto / "
                         "chrome://tracing)")
+    p.add_argument("--obs-tail", default=None, metavar="PATH",
+                   help="tail-based trace sampling (DESIGN.md §19): record "
+                        "every request tree provisionally, keep the ones "
+                        "that breach the --slo-ms target, error, or land "
+                        "in the rolling p99 (plus a 1%% head baseline), "
+                        "and write the kept trees' JSONL to PATH; implies "
+                        "the span tracer")
+    p.add_argument("--slo-shed", action="store_true",
+                   help="with --sched: feed completions into a per-tenant "
+                        "SLO burn-rate monitor (--slo-ms target) and shed "
+                        "new arrivals of any tenant burning its error "
+                        "budget on both the fast and slow windows "
+                        "(DESIGN.md §19); off by default")
     p.add_argument("--region-slots", type=int, default=None, metavar="N",
                    help="with --sched: bound each lane to N configured-"
                         "region slots (repro.regions, DESIGN.md §16); "
@@ -117,10 +138,15 @@ def main(argv=None):
         print(f"metrics http://{host}:{port}/metrics "
               f"(+ /metrics.json)")
     tracer = None
-    if args.obs_trace:
+    sampler = None
+    if args.obs_trace or args.obs_tail:
         from repro.obs import trace as obs_trace
         tracer = obs_trace.Tracer()
         obs_trace.set_tracer(tracer)
+        if args.obs_tail:
+            from repro.obs.tail import TailSampler
+            sampler = TailSampler(tracer, sample_rate=0.01,
+                                  slo_s=args.slo_ms * 1e-3)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -173,11 +199,22 @@ def main(argv=None):
         print(f"decoded {args.gen} tokens × batch {args.batch} in "
               f"{dt*1e3:.1f} ms ({args.batch*(args.gen-1)/max(dt,1e-9):.0f} tok/s)")
         print("sample row:", gen[0][:16], "...")
-        if tracer is not None:
+        if tracer is not None and args.obs_trace:
             with open(args.obs_trace, "w") as f:
                 f.write(tracer.export_chrome())
             print(f"obs trace ({len(tracer.spans)} spans) -> "
                   f"{args.obs_trace}")
+        if sampler is not None:
+            with open(args.obs_tail, "w") as f:
+                f.write(sampler.export_jsonl())
+            st = sampler.stats()
+            print(f"obs tail: kept {st['kept']}/{st['seen']} trees "
+                  f"({st['by_reason']}) -> {args.obs_tail}")
+        if tracer is not None and args.sched:
+            from repro.obs import critical
+            blames = critical.attribute(tracer)
+            if blames:
+                print(critical.format_report(blames))
         if httpd is not None and args.metrics_hold > 0:
             print(f"holding metrics endpoint {args.metrics_hold:.0f}s",
                   flush=True)
@@ -197,7 +234,20 @@ def _decode_scheduled(args, decode, sample_fn, params, cache, tok, rng,
     """
     from repro.sched import CostModel, RequestQueue, Scheduler, TraceRecorder
 
-    queue = RequestQueue()
+    slo = args.slo_ms * 1e-3
+    monitor = None
+    if args.slo_shed:
+        # SLO feedback loop (DESIGN.md §19): completions feed per-tenant
+        # burn-rate windows; a tenant burning both windows has its NEW
+        # arrivals shed at admission. Windows scale with the per-token
+        # target so the fast window holds ~20 steps of signal.
+        from repro.obs.slo import SloMonitor, SloShedder
+        monitor = SloMonitor(threshold=2.0)
+        monitor.add("decode", target_s=slo, objective=0.9,
+                    fast_s=20 * slo, slow_s=200 * slo)
+        queue = RequestQueue(admission=SloShedder(monitor))
+    else:
+        queue = RequestQueue()
     cost = CostModel()
     recorder = TraceRecorder() if args.sched_trace else None
     sched = Scheduler(queue, cost=cost, policy=args.sched_policy,
@@ -205,7 +255,8 @@ def _decode_scheduled(args, decode, sample_fn, params, cache, tok, rng,
                       recorder=recorder,
                       region_slots=args.region_slots,
                       region_policy=args.region_policy,
-                      n_channels=args.sched_channels)
+                      n_channels=args.sched_channels,
+                      slo=monitor)
 
     state = {"cache": cache, "tok": tok, "rng": rng}
 
@@ -218,11 +269,16 @@ def _decode_scheduled(args, decode, sample_fn, params, cache, tok, rng,
         return state["tok"]
 
     t0 = time.time()
-    slo = args.slo_ms * 1e-3
+    shed_steps = 0
     for i in range(args.gen - 1):
         now = sched.now()
-        queue.submit(step, (i,), deadline=now + slo, tenant="decode",
-                     arrival=now, cost_key=("decode_step", args.arch))
+        it = queue.submit(step, (i,), deadline=now + slo, tenant="decode",
+                          arrival=now, cost_key=("decode_step", args.arch))
+        if it.shed:
+            # admission dropped the step: no token this position — the
+            # decode chain resumes at the next admitted step
+            shed_steps += 1
+            continue
         sched.drain()
         out_tokens.append(np.asarray(state["tok"]))
     dt = time.time() - t0
@@ -246,6 +302,11 @@ def _decode_scheduled(args, decode, sample_fn, params, cache, tok, rng,
               f"({lane0['hits']} hits / {lane0['loads']} loads / "
               f"{lane0['evictions']} evictions), "
               f"{r['swap_seconds']*1e3:.2f} ms charged to reconfig")
+    if monitor is not None:
+        print(monitor.report(now=sched.now()))
+        if shed_steps:
+            print(f"slo-shed: {shed_steps} decode steps shed at "
+                  f"admission")
     if recorder is not None:
         recorder.dump(args.sched_trace)
         print(f"sched trace ({len(recorder.events)} events) -> "

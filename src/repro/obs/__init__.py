@@ -1,6 +1,7 @@
-"""repro.obs — unified telemetry: spans, metrics, drift (DESIGN.md §15).
+"""repro.obs — unified telemetry: spans, metrics, drift, and the
+analysis/action tier on top of them (DESIGN.md §15, §19).
 
-Three small, dependency-free modules threaded through the whole request
+Signal modules, dependency-free and threaded through the request
 lifecycle:
 
 * :mod:`repro.obs.trace` — structured spans (admission → coalesce →
@@ -12,14 +13,30 @@ lifecycle:
 * :mod:`repro.obs.drift` — modeled-vs-observed residual ratios per
   (fingerprint, bucket, dtype), ranked by where memhier is most wrong.
 
+Analysis/action modules (§19) that turn those signals into answers:
+
+* :mod:`repro.obs.critical` — per-request critical path + typed blame
+  buckets (queue-wait / region-swap / coalesce / channel-contention /
+  negotiate / pallas_build / compute), conservation-checked.
+* :mod:`repro.obs.tail` — tail-based sampling: keep every SLO-breaching,
+  erroring, or p99 tree even at a 1% baseline rate.
+* :mod:`repro.obs.slo` — per-tenant SLOs with multi-window burn rates
+  and the admission shed/deprioritise hook queue.submit consults.
+
 All instrumentation is near-zero when off: ``bench_hotpath`` gates the
 warm-dispatch overhead with tracing+metrics enabled at ≤ 3% vs
 disabled.
 """
+from repro.obs.critical import (Blame, attribute, blame_report,
+                                critical_path, export_jsonl as
+                                export_blame_jsonl, format_report,
+                                max_residual)
 from repro.obs.drift import DriftCell, DriftTracker, watch_programs
 from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
                                MetricsRegistry, REGISTRY, default_registry,
                                start_http_server)
+from repro.obs.slo import Slo, SloMonitor, SloShedder
+from repro.obs.tail import TailSampler
 from repro.obs.trace import (NULL_SPAN, Span, Tracer, VirtualClock,
                              get_tracer, set_tracer, span, using_tracer)
 
@@ -29,4 +46,7 @@ __all__ = [
     "Span", "Tracer", "VirtualClock", "NULL_SPAN",
     "get_tracer", "set_tracer", "span", "using_tracer",
     "DriftCell", "DriftTracker", "watch_programs",
+    "Blame", "attribute", "blame_report", "critical_path",
+    "export_blame_jsonl", "format_report", "max_residual",
+    "TailSampler", "Slo", "SloMonitor", "SloShedder",
 ]

@@ -184,9 +184,13 @@ class Histogram:
     def quantile(self, q: float) -> float:
         """Upper bucket edge covering quantile ``q`` (Prometheus-style:
         resolution is the bucket grid, not the raw samples).  Returns
-        ``inf`` if the quantile lands in the overflow bucket, ``nan``
-        when empty."""
-        if self._count == 0:
+        ``nan`` when the histogram is empty or when EVERY sample landed
+        in the +Inf overflow bucket — the grid carries no information
+        in either case, and consumers (``to_snapshot`` p50/p99, drift
+        thresholds) treat both identically.  A quantile that lands in
+        the overflow bucket of a *mixed* histogram still returns
+        ``inf``: some samples genuinely exceeded the grid."""
+        if self._count == 0 or self._counts[-1] == self._count:
             return float("nan")
         target = q * self._count
         acc = 0

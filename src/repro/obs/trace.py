@@ -174,6 +174,11 @@ class Tracer:
         self.spans: List[Span] = []
         self.dropped = 0
         self.unsampled = 0
+        #: callbacks fired once per sampled ROOT span, at its first
+        #: finish — the attach point for tail-based sampling
+        #: (:class:`repro.obs.tail.TailSampler`, DESIGN.md §19), which
+        #: must see the whole tree only after its outcome is known.
+        self.root_listeners: List = []
         self._stack: List[Span] = []
         self._next_id = 1
         # first root always sampled (when rate > 0): start one credit
@@ -220,8 +225,13 @@ class Tracer:
     def finish(self, span: Span, **attrs):
         if attrs:
             span.attrs.update(attrs)
-        if span.end is None:
+        first = span.end is None
+        if first:
             span.end = self.clock()
+        if (first and span.parent_id is None and span.sampled
+                and self.root_listeners):
+            for cb in list(self.root_listeners):
+                cb(span)
 
     def span(self, name: str, parent=_CURRENT, **attrs) -> _SpanCtx:
         """``with tracer.span("negotiate", ...) as sp:`` — starts,

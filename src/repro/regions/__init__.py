@@ -11,12 +11,14 @@ lanes where the work's region is already resident.
 from repro.regions.cost import (PinnedReconfigCost, ReconfigCostModel,
                                 region_key_of)
 from repro.regions.policy import (RESIDENCY_POLICIES, LruResidency,
+                                  OracleResidency,
                                   PredictedReuseResidency, make_policy)
 from repro.regions.residency import (RegionEvent, RegionFile, ReuseHistory,
                                      SlotState)
 
 __all__ = [
     "LruResidency",
+    "OracleResidency",
     "PinnedReconfigCost",
     "PredictedReuseResidency",
     "RESIDENCY_POLICIES",

@@ -107,7 +107,7 @@ class RegionFile:
     """
 
     def __init__(self, n_lanes: int, slots: Optional[int] = None,
-                 policy: str = "lru",
+                 policy="lru",
                  cost: Optional[ReconfigCostModel] = None,
                  history: Optional[ReuseHistory] = None):
         if n_lanes < 1:
@@ -116,8 +116,15 @@ class RegionFile:
             raise ValueError(f"slots must be >= 0, got {slots}")
         self.n_lanes = n_lanes
         self.slots = None if not slots else int(slots)
-        self.policy_name = policy
-        self.policy = make_policy(policy)
+        # a policy name from the registry, or a ready policy instance —
+        # replay hands in OracleResidency objects that cannot be built
+        # from a name alone (they carry the trace's future schedule).
+        if isinstance(policy, str):
+            self.policy = make_policy(policy)
+        else:
+            self.policy = policy
+        self.policy_name = getattr(self.policy, "name",
+                                   type(self.policy).__name__)
         self.cost = cost if cost is not None else ReconfigCostModel()
         self.history = history if history is not None else ReuseHistory()
         self._resident: List[Dict[object, SlotState]] = [
@@ -186,6 +193,12 @@ class RegionFile:
     def place(self, lane: int, key, now: float):
         """Commit ``key`` running on ``lane`` at ``now``; returns
         ``(cost_s, [RegionEvent, ...])`` in commit order."""
+        note = getattr(self.policy, "note_touch", None)
+        if note is not None:
+            # future-aware policies (OracleResidency) track their
+            # position in the touch sequence; the cursor must advance
+            # past THIS touch before choose_victim consults next uses
+            note(key)
         lane_res = self._resident[lane]
         st = lane_res.get(key)
         if st is not None:

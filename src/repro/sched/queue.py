@@ -27,6 +27,13 @@ with an ``admission`` child, and ``pop_ready`` emits one ``coalesce``
 span per formed batch, parented to the batch's first member. Queue
 depth at every pop is recorded in the
 ``repro_sched_queue_depth`` histogram.
+
+SLO feedback (DESIGN.md §19): construct with
+``RequestQueue(admission=SloShedder(monitor))`` and every submit first
+consults the hook — a tenant whose :class:`repro.obs.slo.Slo` is
+burning on both windows has its new arrivals shed (never enqueued,
+counted in ``repro_sched_shed_total``) or deprioritised (weight scaled
+down for the WFQ policy). See :class:`repro.obs.slo.SloShedder`.
 """
 from __future__ import annotations
 
@@ -52,6 +59,20 @@ _QUEUE_DEPTH = _metrics.REGISTRY.histogram(
     buckets=QUEUE_DEPTH_BUCKETS)
 _SUBMITS = _metrics.REGISTRY.counter(
     "repro_sched_submits_total", help="admitted work items")
+
+
+def _shed_total(tenant: str) -> _metrics.Counter:
+    return _metrics.REGISTRY.counter(
+        "repro_sched_shed_total",
+        help="arrivals rejected by the SLO admission hook",
+        labels={"tenant": tenant})
+
+
+def _deprioritised_total(tenant: str) -> _metrics.Counter:
+    return _metrics.REGISTRY.counter(
+        "repro_sched_deprioritised_total",
+        help="arrivals weight-scaled by the SLO admission hook",
+        labels={"tenant": tenant})
 
 
 def program_of(target) -> Optional[Program]:
@@ -130,6 +151,9 @@ class WorkItem:
     # root "request" span (repro.obs.trace), None when tracing is off;
     # opened at submit, finished by the scheduler at completion.
     span: Any = None
+    # True when the SLO admission hook rejected this arrival: the item
+    # was never enqueued and will never be scheduled (DESIGN.md §19).
+    shed: bool = False
 
     @property
     def n_elems(self) -> Optional[int]:
@@ -183,11 +207,24 @@ class Batch:
 
 
 class RequestQueue:
-    """Admission-validated FIFO of pending work items."""
+    """Admission-validated FIFO of pending work items.
 
-    def __init__(self):
+    ``admission`` is the optional SLO feedback hook (DESIGN.md §19,
+    normally a :class:`repro.obs.slo.SloShedder`): an object whose
+    ``admit(tenant, now) -> "accept" | "shed" | "deprioritise"`` is
+    consulted once per submit with the item's arrival time.  ``shed``
+    rejects the arrival before it queues (the returned
+    :class:`WorkItem` has :attr:`WorkItem.shed` set and is NOT
+    pending); ``deprioritise`` admits it with
+    ``weight × admission.weight_factor`` so the weighted-fair policy
+    starves it gracefully instead.  Off (``None``) by default —
+    ``serve.py --slo-shed`` wires it up.
+    """
+
+    def __init__(self, admission=None):
         self._seq = itertools.count()
         self.pending: list[WorkItem] = []
+        self.admission = admission
 
     def __len__(self) -> int:
         return len(self.pending)
@@ -225,12 +262,33 @@ class RequestQueue:
         if weight <= 0:
             raise ValueError(f"weight must be positive, got {weight}")
         seq = next(self._seq)
+        weight = float(weight)
+        verdict = ("accept" if self.admission is None
+                   else self.admission.admit(tenant=tenant,
+                                             now=float(arrival)))
         tr = _trace.ACTIVE
         root = None
         if tr is not None:
             root = tr.start_span("request", parent=None, seq=seq,
                                  tenant=tenant, arrival=float(arrival),
                                  deadline=deadline)
+        if verdict == "shed":
+            # rejected before queueing: the root span is finished
+            # immediately (no blame inputs, so critical.attribute skips
+            # it) and the item never becomes pending
+            _shed_total(tenant).inc()
+            if tr is not None and root is not None:
+                tr.finish(root, shed=True)
+            return WorkItem(seq=seq, target=target,
+                            operands=tuple(operands), deadline=deadline,
+                            arrival=float(arrival), tenant=tenant,
+                            weight=weight, mode=mode, cost_key=cost_key,
+                            key=None, span=root, shed=True)
+        if verdict == "deprioritise":
+            _deprioritised_total(tenant).inc()
+            weight *= getattr(self.admission, "weight_factor", 0.25)
+            if root is not None:
+                root.attrs["deprioritised"] = True
         with (_trace.NULL_SPAN if tr is None
               else tr.span("admission", parent=root, seq=seq)) as adm:
             key = coalesce_key(target, operands)
@@ -240,7 +298,7 @@ class RequestQueue:
         item = WorkItem(seq=seq, target=target,
                         operands=tuple(operands), deadline=deadline,
                         arrival=float(arrival), tenant=tenant,
-                        weight=float(weight), mode=mode, cost_key=cost_key,
+                        weight=weight, mode=mode, cost_key=cost_key,
                         key=key, span=root)
         self.pending.append(item)
         _SUBMITS.inc()

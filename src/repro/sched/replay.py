@@ -40,6 +40,7 @@ from __future__ import annotations
 import json
 from typing import Optional, Sequence
 
+from repro.obs import trace as _trace
 from repro.regions import PinnedReconfigCost
 
 from .cost import CostModel, Estimate
@@ -120,7 +121,7 @@ def replay(trace: TraceRecorder, policy: Optional[str] = None,
            n_lanes: Optional[int] = None,
            recorder: Optional[TraceRecorder] = None,
            region_slots: Optional[int] = None,
-           region_policy: Optional[str] = None,
+           region_policy=None,
            n_channels: Optional[int] = None) -> Report:
     """Re-run the scheduler over a recorded arrival sequence.
 
@@ -137,6 +138,13 @@ def replay(trace: TraceRecorder, policy: Optional[str] = None,
     events; the replayed scheduler rebuilds the region file from those,
     so residency decisions — and the swap charges they imply — replay
     without the original targets or any artifact cache.
+
+    ``region_policy`` also accepts a policy *instance* — that is how
+    :class:`repro.regions.policy.OracleResidency` (Belady with the
+    trace's perfect future knowledge) scores the online policies'
+    regret in ``bench_regions``.  With a tracer active, replay re-opens
+    each request's root span so blame attribution
+    (:mod:`repro.obs.critical`) works on replayed runs too.
     """
     cfgs = trace.of_kind("config")
     cfg = cfgs[0] if cfgs else {"policy": "edf", "n_lanes": 2}
@@ -151,6 +159,7 @@ def replay(trace: TraceRecorder, policy: Optional[str] = None,
     queue = RequestQueue()
     estimates: dict[int, Estimate] = {}
     pinned_costs: dict[tuple, float] = {}
+    tr = _trace.ACTIVE
     for e in submits:
         rk = (("trace", e["region_key"])
               if e.get("region_key") is not None else None)
@@ -162,6 +171,15 @@ def replay(trace: TraceRecorder, policy: Optional[str] = None,
                         key=None if e.get("key") is None
                         else ("replay", e["key"]),
                         region_key=rk)
+        if tr is not None:
+            # re-open each request's root span so the replayed
+            # scheduler re-stamps the same blame inputs it recorded
+            # live — obs/critical.py's JSONL export is then
+            # byte-identical across record/replay (DESIGN.md §19).
+            item.span = tr.start_span(
+                "request", parent=None, seq=item.seq,
+                tenant=item.tenant, arrival=float(item.arrival),
+                deadline=item.deadline)
         queue.pending.append(item)
         estimates[item.seq] = Estimate(
             seconds=e["predicted_s"], modeled_s=e["modeled_s"],

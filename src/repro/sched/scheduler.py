@@ -58,6 +58,15 @@ are finished at completion with predicted/observed seconds, and the
 registry carries per-tenant ``repro_sched_latency_seconds`` histograms
 (p50/p99 in the snapshot), ``repro_sched_queue_depth``, round/item
 counters, and ``repro_sched_deadline_miss_total``.
+
+Blame attribution + SLOs (DESIGN.md §19): each root span's finish call
+also stamps the request's blame inputs — ``start``, ``solo_s``,
+``batch_s``, ``swap_s`` (region charge), ``contention_s``, ``channel``,
+per-round channel DRAM busy seconds — which
+:func:`repro.obs.critical.attribute` decomposes into conservation-
+checked buckets; pass ``Scheduler(slo=SloMonitor(...))`` to feed each
+completion's latency into per-tenant burn-rate windows that the queue's
+admission hook (:class:`repro.obs.slo.SloShedder`) acts on.
 """
 from __future__ import annotations
 
@@ -99,6 +108,15 @@ def _deadline_miss(tenant: str) -> _metrics.Counter:
         "repro_sched_deadline_miss_total",
         help="completions after their deadline",
         labels={"tenant": tenant})
+
+
+def _channel_busy(channel: int) -> _metrics.Counter:
+    """Per-channel DRAM busy-seconds (DESIGN.md §18 model output,
+    exposed via the registry so ``serve.py --metrics`` serves it)."""
+    return _metrics.REGISTRY.counter(
+        "repro_sched_dram_busy_seconds_total",
+        help="modeled DRAM busy seconds accumulated per channel",
+        labels={"channel": str(channel)})
 
 
 # ---------------------------------------------------------------------------
@@ -292,10 +310,11 @@ class Scheduler:
                  mesh_axis="parts", mode: Optional[str] = None,
                  clock: str = "wall", recorder=None, plan_cache=None,
                  region_slots: Optional[int] = None,
-                 region_policy: str = "lru", region_cost=None,
+                 region_policy="lru", region_cost=None,
                  region_file: Optional[RegionFile] = None,
                  n_channels: Optional[int] = None,
-                 lane_channels: Optional[Sequence[int]] = None):
+                 lane_channels: Optional[Sequence[int]] = None,
+                 slo=None):
         if clock not in ("wall", "virtual"):
             raise ValueError(f"clock must be 'wall' or 'virtual', got "
                              f"{clock!r}")
@@ -324,6 +343,11 @@ class Scheduler:
         self.mode = mode
         self.clock = clock
         self.recorder = recorder
+        # SLO feedback (DESIGN.md §19): a repro.obs.slo.SloMonitor fed
+        # one latency event per completion, on this scheduler's clock —
+        # pair it with RequestQueue(admission=SloShedder(monitor)) to
+        # close the shed loop.
+        self.slo = slo
         self.placements: list[Placement] = []
         self.results: dict[int, Any] = {}
         self._now = 0.0
@@ -573,13 +597,18 @@ class Scheduler:
         lanes, charges = self._assign_lanes(round_batches, start)
         chans = [self.lane_channels[l] for l in lanes]
         channels = chans if self.n_channels > 1 else None
-        ests = [self._batch_estimate(b) for b in round_batches]
+        ests0 = [self._batch_estimate(b) for b in round_batches]
+        ests = ests0
         if any(charges):
             # the swap penalty serialises ahead of the batch's own work
             # on its lane, so it joins the round's contended makespan
             ests = [dataclasses.replace(e, seconds=e.seconds + c)
-                    for e, c in zip(ests, charges)]
+                    for e, c in zip(ests0, charges)]
         makespan = self.cost.contended_makespan(ests, channels)
+        busy_by_ch: dict[int, float] = {}
+        for ch, e in zip(chans, ests0):
+            busy_by_ch[ch] = busy_by_ch.get(ch, 0.0) + e.dram_busy_s
+            _channel_busy(ch).inc(e.dram_busy_s)
 
         tr = _trace.ACTIVE
         if self.clock == "virtual":
@@ -635,8 +664,9 @@ class Scheduler:
                                   n_items=len(b.items),
                                   cost_key=it0.cost_key)
 
-        for lane, ch, b, outs, obs, fin in zip(
-                lanes, chans, round_batches, results, observed, finishes):
+        for lane, ch, b, outs, obs, fin, charge, est0 in zip(
+                lanes, chans, round_batches, results, observed, finishes,
+                charges, ests0):
             for it, out in zip(b.items, outs):
                 it.result = out
                 it.predicted_s = self._estimate(it).seconds
@@ -649,9 +679,30 @@ class Scheduler:
                 if it.deadline is not None and fin > it.deadline:
                     _deadline_miss(it.tenant).inc()
                 if it.span is not None and tr is not None:
+                    # blame inputs (DESIGN.md §19): the scheduler-time
+                    # quantities obs/critical.py decomposes latency
+                    # with.  Virtual clock: solo/batch are model
+                    # estimates and the region swap charge is real;
+                    # wall clock: solo/batch are observed and the
+                    # charge is a model fiction execution never paid.
+                    if self.clock == "virtual":
+                        solo_s, batch_s, swap_s = (
+                            it.predicted_s, est0.seconds, charge)
+                    else:
+                        solo_s, batch_s, swap_s = it.observed_s, obs, 0.0
                     tr.finish(it.span, lane=lane, finish=fin,
                               predicted_s=it.predicted_s,
-                              observed_s=it.observed_s)
+                              observed_s=it.observed_s,
+                              start=start, solo_s=solo_s,
+                              batch_s=batch_s, swap_s=swap_s,
+                              contention_s=(fin - start) - batch_s
+                              - swap_s,
+                              channel=ch, clock=self.clock,
+                              dram_busy_s=est0.dram_busy_s,
+                              channel_busy_s=busy_by_ch[ch])
+                if self.slo is not None:
+                    self.slo.record(it.tenant,
+                                    max(fin - it.arrival, 0.0), now=fin)
                 self.results[it.seq] = out
                 self.placements.append(Placement(
                     seq=it.seq, lane=lane, round=self._round, start=start,

@@ -28,10 +28,13 @@ import repro.kernels  # noqa: F401 — registers the ISA
 from repro.core import artifact, isa
 from repro.core import program as prog_mod
 from repro.memhier import TPU_V5E
+from repro.obs import critical as obs_critical
 from repro.obs import drift as obs_drift
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import Slo, SloMonitor, SloShedder
+from repro.obs.tail import TailSampler
 from repro.roofline import dispatch_cache_report
 from repro.sched import CostModel, RequestQueue, Scheduler
 
@@ -202,6 +205,17 @@ class TestMetrics:
     def test_histogram_empty_quantile_nan(self):
         h = MetricsRegistry().histogram("t_e", buckets=(1.0,))
         assert h.count == 0 and h.quantile(0.5) != h.quantile(0.5)  # NaN
+
+    def test_histogram_all_overflow_quantile_nan(self):
+        """Every observation past the last finite edge: no finite edge
+        bounds ANY quantile, so the answer is NaN (not inf — inf is for
+        a quantile that lands in a populated overflow of an otherwise
+        informative histogram, see the le-inclusive test above)."""
+        h = MetricsRegistry().histogram("t_of", buckets=(0.1, 1.0))
+        h.observe(5.0)
+        h.observe(50.0)
+        for q in (0.01, 0.5, 0.99):
+            assert h.quantile(q) != h.quantile(q)    # NaN
 
     def test_labels_distinct_and_escaped(self):
         r = MetricsRegistry()
@@ -827,3 +841,386 @@ class TestDriftThreshold:
             cost.observe(fused, n_elems=5000, dtype=F32,
                          seconds=est.seconds * 10)
         assert cost.drift.exceeding()
+
+
+# ---------------------------------------------------------------------------
+# §19: critical-path blame attribution
+# ---------------------------------------------------------------------------
+
+def _blame_run(n=6, arrival_step=1e-4):
+    """A small virtual-clock scheduled run under the ACTIVE tracer:
+    ``n`` requests, two tenants, distinct scalars (separate batches)."""
+    fused = isa.fuse("c0_scale", "c0_add")
+    _, x, b = _operands(2048)
+    q = RequestQueue()
+    for i in range(n):
+        q.submit(fused, (2.0 + i, x, b), tenant=f"t{i % 2}",
+                 arrival=i * arrival_step)
+    Scheduler(q, cost=CostModel(hierarchy=TPU_V5E), policy="fifo",
+              n_lanes=1, clock="virtual").drain()
+
+
+class TestBlame:
+    def test_virtual_conservation_and_buckets(self, tracer):
+        _blame_run(n=6)
+        blames = obs_critical.attribute(tracer)
+        assert [b.seq for b in blames] == list(range(6))
+        assert obs_critical.max_residual(blames) <= 1e-9
+        for b in blames:
+            # VirtualClock span ticks are synthetic span counts, not
+            # scheduler time: the carved buckets must stay exactly zero
+            assert b.buckets["negotiate"] == 0.0
+            assert b.buckets["pallas_build"] == 0.0
+            assert b.buckets["compute"] > 0.0
+            assert b.buckets["queue_wait"] >= 0.0
+            assert b.total_s == pytest.approx(b.finish - b.arrival)
+            assert b.critical_path[0] == "request"
+            assert len(b.critical_path) >= 2
+            assert b.top() in obs_critical.BUCKETS
+
+    def test_report_ranked_and_formatted(self, tracer):
+        _blame_run(n=4)
+        blames = obs_critical.attribute(tracer)
+        rep = obs_critical.blame_report(blames)
+        assert sorted(rep) == ["t0", "t1"]
+        for ranked in rep.values():
+            assert {k for k, _ in ranked} == set(obs_critical.BUCKETS)
+            totals = [v for _, v in ranked]
+            assert totals == sorted(totals, reverse=True)
+        text = obs_critical.format_report(blames)
+        assert "blame[t0]:" in text and "blame[t1]:" in text
+
+    def test_export_jsonl_byte_stable_and_id_free(self):
+        def run():
+            t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+            with obs_trace.using_tracer(t):
+                _blame_run(n=4)
+            return obs_critical.export_jsonl(obs_critical.attribute(t))
+
+        run()                            # warm geometry/dispatch state
+        a, b = run(), run()
+        assert a == b and a
+        for line in a.strip().splitlines():
+            d = json.loads(line)
+            assert "span_id" not in d and "trace_id" not in d
+            assert set(d["buckets"]) == set(obs_critical.BUCKETS)
+
+    def test_shed_and_unfinished_roots_skipped(self, tracer):
+        root = tracer.start_span("request", parent=None, seq=0,
+                                 tenant="a", arrival=0.0)
+        tracer.finish(root, shed=True)   # finished without blame inputs
+        tracer.start_span("request", parent=None, seq=1, arrival=0.0)
+        assert obs_critical.attribute(tracer) == []
+
+    def test_wall_clock_carves_negotiate(self, tracer):
+        prog_mod.clear_dispatch_caches()
+        fused = isa.fuse("c0_scale", "c0_add")
+        q = RequestQueue()
+        q.submit(fused, _operands(), arrival=0.0)
+        with artifact.using_plan_cache(None):
+            Scheduler(q, cost=CostModel(hierarchy=TPU_V5E), policy="fifo",
+                      n_lanes=1, clock="wall", mode="interpret").drain()
+        (b,) = obs_critical.attribute(tracer)
+        assert b.clock == "wall"
+        assert abs(b.residual_s) <= 1e-9
+        assert b.buckets["negotiate"] > 0.0      # cold sweep carved out
+        assert b.buckets["pallas_build"] >= 0.0
+        assert b.buckets["compute"] >= 0.0       # carve-out never negative
+
+
+# ---------------------------------------------------------------------------
+# §19: tail-based sampling
+# ---------------------------------------------------------------------------
+
+def _finish_request(t, latency, tenant="default", error=False):
+    """Open + finish one synthetic request tree on tracer ``t`` with a
+    scheduler-style stamped latency (``finish - arrival``)."""
+    root = t.start_span("request", parent=None, tenant=tenant, arrival=0.0)
+    child = t.start_span("placement", parent=root)
+    if error:
+        child.attrs["error"] = "RuntimeError: boom"
+    t.finish(child)
+    t.finish(root, start=0.0, finish=latency)
+    return root
+
+
+class TestTailSampler:
+    def test_requires_full_head_rate(self):
+        with pytest.raises(ValueError):
+            TailSampler(obs_trace.Tracer(sample_rate=0.5))
+
+    def test_parameter_validation(self):
+        t = obs_trace.Tracer()
+        with pytest.raises(ValueError):
+            TailSampler(t, ring=0)
+        with pytest.raises(ValueError):
+            TailSampler(t, sample_rate=1.5)
+        with pytest.raises(ValueError):
+            TailSampler(t, quantile=1.0)
+
+    def test_error_beats_slo_beats_head(self):
+        t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+        ts = TailSampler(t, sample_rate=1.0, slo_s=1e-3)
+        e = _finish_request(t, 5e-3, error=True)   # breaches AND errors
+        s = _finish_request(t, 5e-3)               # just breaches
+        f = _finish_request(t, 1e-4)               # fast: head keep
+        assert ts.kept[e.span_id] == "error"
+        assert ts.kept[s.span_id] == "slo"
+        assert ts.kept[f.span_id] == "head"
+        assert ts.stats()["by_reason"] == {
+            "error": 1, "slo": 1, "p99": 0, "head": 1}
+
+    def test_per_tenant_slo_dict(self):
+        t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+        ts = TailSampler(t, slo_s={"gold": 1e-3})
+        g = _finish_request(t, 2e-3, tenant="gold")
+        _finish_request(t, 2e-3, tenant="free")    # no SLO: not kept
+        assert list(ts.kept) == [g.span_id]
+        assert ts.kept[g.span_id] == "slo"
+
+    def test_head_credit_deterministic(self):
+        t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+        ts = TailSampler(t, sample_rate=0.5)
+        kept = []
+        for i in range(6):
+            root = _finish_request(t, 1e-4)
+            if root.span_id in ts.kept:
+                kept.append(i)
+        assert kept == [0, 2, 4]                   # first kept, then 1-in-2
+
+    def test_p99_threshold_is_causal(self):
+        t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+        ts = TailSampler(t, p99_min=2)
+        _finish_request(t, 1e-3)                   # window unarmed
+        _finish_request(t, 1e-3)                   # still judging blind
+        slow = _finish_request(t, 5e-3)            # >= p99 of {1ms, 1ms}
+        assert list(ts.kept.values()) == ["p99"]
+        assert list(ts.kept) == [slow.span_id]
+
+    def test_ring_eviction_prunes_tracer(self):
+        t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+        ts = TailSampler(t, ring=2)
+        roots = [_finish_request(t, 1e-4) for _ in range(5)]
+        assert ts.kept == {} and ts.evicted == 3
+        alive = {s.span_id for s in t.spans}
+        assert all(r.span_id not in alive for r in roots[:3])
+        assert all(r.span_id in alive for r in roots[3:])
+        assert ts.stats()["provisional"] == 2
+
+    def test_export_jsonl_byte_stable(self):
+        def run():
+            t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+            ts = TailSampler(t, slo_s=1e-3, sample_rate=0.5)
+            _finish_request(t, 5e-3)
+            _finish_request(t, 1e-4)
+            _finish_request(t, 2e-3, error=True)
+            return ts.export_jsonl()
+
+        a, b = run(), run()
+        assert a == b and a
+        reasons = [json.loads(ln).get("keep_reason")
+                   for ln in a.strip().splitlines()]
+        assert [r for r in reasons if r] == ["slo", "head", "error"]
+
+
+# ---------------------------------------------------------------------------
+# §19: SLO burn rate + admission feedback
+# ---------------------------------------------------------------------------
+
+class TestSlo:
+    def _slo(self, **kw):
+        kw.setdefault("objective", 0.9)
+        kw.setdefault("fast_s", 1.0)
+        kw.setdefault("slow_s", 10.0)
+        return Slo("a", 1e-3, **kw)
+
+    def test_burn_rate_algebra(self):
+        s = self._slo()
+        assert s.burn_rate() == 0.0                # no events
+        assert s.record(2e-3, now=100.0) is True
+        assert s.record(0.5e-3, now=100.5) is False
+        # 1 bad of 2 in the fast window, over a 0.1 budget
+        assert s.burn_rate(now=100.5, window="fast") == pytest.approx(5.0)
+
+    def test_effective_now_never_rewinds(self):
+        s = self._slo()
+        s.record(2e-3, now=100.0)
+        assert s.burn_rate(now=0.0, window="fast") == \
+            s.burn_rate(now=None, window="fast")
+
+    def test_burning_requires_both_windows(self):
+        s = self._slo()
+        for i in range(18):                        # healthy history
+            s.record(1e-4, now=i * 0.5)
+        s.record(5e-3, now=9.4)
+        s.record(5e-3, now=9.6)
+        # fast window saturated, slow window still diluted: not burning
+        assert s.burn_rate(now=9.6, window="fast") > 2.0
+        assert s.burn_rate(now=9.6, window="slow") <= 2.0
+        assert not s.burning(now=9.6, threshold=2.0)
+        for k in range(8):                         # sustained breach
+            s.record(5e-3, now=9.61 + k * 0.01)
+        assert s.burning(now=9.7, threshold=2.0)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Slo("a", 0.0)
+        with pytest.raises(ValueError):
+            Slo("a", 1e-3, objective=1.0)
+        with pytest.raises(ValueError):
+            Slo("a", 1e-3, fast_s=10.0, slow_s=1.0)
+        with pytest.raises(ValueError):
+            self._slo().burn_rate(window="weird")
+
+    def test_max_events_sweeps_old(self):
+        s = self._slo(max_events=4)
+        for i in range(10):
+            s.record(1e-4, now=float(i * 100))     # far apart in time
+        assert len(s._events) <= 4
+
+
+class TestSloMonitor:
+    def _burning_monitor(self, tenant="b"):
+        mon = SloMonitor(threshold=2.0)
+        mon.add(tenant, target_s=1e-3, objective=0.9,
+                fast_s=1.0, slow_s=10.0)
+        for i in range(30):
+            mon.record(tenant, 5e-3, now=0.1 + i * 0.3)
+        return mon
+
+    def test_add_get_and_duplicates(self):
+        mon = SloMonitor()
+        slo = mon.add("a", target_s=1e-3)
+        assert mon.get("a") is slo and mon.tenants() == ["a"]
+        with pytest.raises(ValueError):
+            mon.add("a", target_s=2e-3)
+        assert mon.get("nope") is None
+
+    def test_record_unregistered_is_noop(self):
+        mon = SloMonitor()
+        mon.record("ghost", 1.0, now=0.0)          # must not raise
+        mon.record_shed("ghost", now=0.0)
+        assert mon.burn_rates() == {}
+
+    def test_burning_and_report(self):
+        mon = self._burning_monitor()
+        mon.add("ok", target_s=1.0)
+        mon.record("ok", 1e-4, now=9.0)
+        assert mon.burning(now=9.1) == ["b"]
+        text = mon.report(now=9.1)
+        assert "slo[b]:" in text and "BURNING" in text
+        assert "slo[ok]:" in text and "(ok)" in text
+
+    def test_gauges_exported(self):
+        mon = self._burning_monitor(tenant="gauge_t")
+        g = obs_metrics.REGISTRY.get(
+            "repro_slo_burn_rate", {"tenant": "gauge_t", "window": "fast"})
+        assert g is not None and g.value > 2.0
+
+    def test_record_shed_holds_burn_signal(self):
+        mon = self._burning_monitor()
+        before = mon.get("b").burn_rate(now=9.1, window="fast")
+        mon.record_shed("b", now=9.2)              # shed = served-zero
+        assert mon.get("b").burn_rate(now=9.2, window="fast") >= before
+
+
+class TestSloShedder:
+    def test_validation(self):
+        mon = SloMonitor()
+        with pytest.raises(ValueError):
+            SloShedder(mon, mode="drop")
+        with pytest.raises(ValueError):
+            SloShedder(mon, weight_factor=0.0)
+
+    def test_accepts_unregistered_and_healthy(self):
+        mon = SloMonitor()
+        mon.add("a", target_s=1.0)
+        shed = SloShedder(mon)
+        assert shed.admit("ghost", now=0.0) == "accept"
+        assert shed.admit("a", now=0.0) == "accept"
+
+    def test_shed_records_bad_event(self):
+        mon = TestSloMonitor()._burning_monitor()
+        shed = SloShedder(mon, mode="shed")
+        n0 = len(mon.get("b")._events)
+        assert shed.admit("b", now=9.1) == "shed"
+        assert len(mon.get("b")._events) == n0 + 1  # signal holds
+
+    def test_deprioritise_does_not_record(self):
+        mon = TestSloMonitor()._burning_monitor()
+        shed = SloShedder(mon, mode="deprioritise", weight_factor=0.5)
+        n0 = len(mon.get("b")._events)
+        assert shed.admit("b", now=9.1) == "deprioritise"
+        assert len(mon.get("b")._events) == n0
+
+    def test_queue_sheds_burning_tenant(self):
+        mon = TestSloMonitor()._burning_monitor()
+        q = RequestQueue(admission=SloShedder(mon))
+        fused = isa.fuse("c0_scale", "c0_add")
+        base = obs_metrics.REGISTRY.counter(
+            "repro_sched_shed_total", labels={"tenant": "b"}).value
+        it = q.submit(fused, _operands(), tenant="b", arrival=9.1)
+        assert it.shed and len(q) == 0
+        assert obs_metrics.REGISTRY.counter(
+            "repro_sched_shed_total",
+            labels={"tenant": "b"}).value == base + 1
+        ok = q.submit(fused, _operands(), tenant="healthy", arrival=9.1)
+        assert not ok.shed and len(q) == 1
+
+    def test_queue_shed_finishes_root_span(self, tracer):
+        mon = TestSloMonitor()._burning_monitor()
+        q = RequestQueue(admission=SloShedder(mon))
+        it = q.submit(isa.fuse("c0_scale", "c0_add"), _operands(),
+                      tenant="b", arrival=9.1)
+        assert it.span is not None and it.span.end is not None
+        assert it.span.attrs["shed"] is True
+        assert obs_critical.attribute(tracer) == []  # no blame inputs
+
+    def test_queue_deprioritises_weight(self):
+        mon = TestSloMonitor()._burning_monitor()
+        q = RequestQueue(admission=SloShedder(
+            mon, mode="deprioritise", weight_factor=0.5))
+        base = obs_metrics.REGISTRY.counter(
+            "repro_sched_deprioritised_total",
+            labels={"tenant": "b"}).value
+        it = q.submit(isa.fuse("c0_scale", "c0_add"), _operands(),
+                      tenant="b", weight=2.0, arrival=9.1)
+        assert not it.shed and len(q) == 1
+        assert it.weight == pytest.approx(1.0)
+        assert obs_metrics.REGISTRY.counter(
+            "repro_sched_deprioritised_total",
+            labels={"tenant": "b"}).value == base + 1
+
+
+# ---------------------------------------------------------------------------
+# §19: OTLP round-trip of the scheduler's blame/SLO span attributes
+# ---------------------------------------------------------------------------
+
+class TestOtlpBlameAttrs:
+    def _run_doc(self):
+        t = obs_trace.Tracer(clock=obs_trace.VirtualClock())
+        with obs_trace.using_tracer(t):
+            _blame_run(n=3)
+        return t.export_otlp_json()
+
+    def test_blame_inputs_typed(self):
+        doc = json.loads(self._run_doc())
+        spans = doc["resourceSpans"][0]["scopeSpans"][0]["spans"]
+        reqs = [s for s in spans if s["name"] == "request"]
+        assert len(reqs) == 3
+        for s in reqs:
+            attrs = {a["key"]: a["value"] for a in s["attributes"]}
+            for k in ("solo_s", "batch_s", "swap_s", "contention_s",
+                      "dram_busy_s", "channel_busy_s"):
+                assert "doubleValue" in attrs[k], (k, attrs[k])
+            assert attrs["clock"] == {"stringValue": "virtual"}
+            assert attrs["channel"] == {"intValue": "0"}
+            assert "intValue" in attrs["lane"]
+
+    def test_hex_ids_stable_across_identical_runs(self):
+        self._run_doc()                  # warm geometry/dispatch state
+        a, b = self._run_doc(), self._run_doc()
+        assert a == b                    # traceId/spanId hex included
+        s = json.loads(a)["resourceSpans"][0]["scopeSpans"][0]["spans"][0]
+        assert re.fullmatch(r"[0-9a-f]{32}", s["traceId"])
+        assert re.fullmatch(r"[0-9a-f]{16}", s["spanId"])

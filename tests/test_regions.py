@@ -22,7 +22,8 @@ import repro.kernels  # noqa: F401 — registers the ISA
 from repro.core import artifact, isa
 from repro.core import program as prog_mod
 from repro.memhier import TPU_V5E
-from repro.regions import (LruResidency, PinnedReconfigCost,
+from repro.regions import (LruResidency, OracleResidency,
+                           PinnedReconfigCost,
                            PredictedReuseResidency, ReconfigCostModel,
                            RegionFile, ReuseHistory, make_policy,
                            region_key_of)
@@ -402,3 +403,59 @@ class TestSchedulerIntegration:
         with pytest.raises(ValueError):
             Scheduler(_region_queue(), cost=CostModel(hierarchy=TPU_V5E),
                       n_lanes=1, clock="virtual", region_file=rf)
+
+
+class TestOracleResidency:
+    """Belady with a known future touch schedule (DESIGN.md §19): evict
+    the resident whose next use is farthest ahead; never-again first."""
+
+    def test_not_in_registry(self):
+        # needs a schedule — replay-only, handed in as an instance
+        with pytest.raises(ValueError):
+            make_policy("oracle")
+
+    def test_evicts_farthest_next_use(self):
+        pol = OracleResidency(["A", "B", "A", "C", "B", "A"])
+        pol.note_touch("A")      # cursor past touch 0
+        pol.note_touch("B")      # cursor past touch 1
+        # next uses now: A@2, B@4 → B is farther
+        slots = _slots(A=0.0, B=1.0)
+        assert pol.choose_victim(slots, ReconfigCostModel(),
+                                 ReuseHistory(), 1.0) == "B"
+
+    def test_never_again_evicted_first(self):
+        pol = OracleResidency(["A", "B", "A"])
+        pol.note_touch("A")
+        pol.note_touch("B")      # B never touched again
+        slots = _slots(A=0.0, B=1.0)
+        assert pol.choose_victim(slots, ReconfigCostModel(),
+                                 ReuseHistory(), 1.0) == "B"
+
+    def test_unknown_key_treated_as_never(self):
+        pol = OracleResidency(["A", "A"])
+        pol.note_touch("A")
+        slots = _slots(A=0.0, Z=1.0)     # Z absent from the schedule
+        assert pol.choose_victim(slots, ReconfigCostModel(),
+                                 ReuseHistory(), 1.0) == "Z"
+
+    def test_cursor_advances_past_current_touch(self):
+        pol = OracleResidency(["A", "A", "B"])
+        pol.note_touch("A")
+        pol.note_touch("A")
+        # both A touches consumed: A's next use is "never", B is due
+        slots = _slots(A=0.0, B=1.0)
+        assert pol.choose_victim(slots, ReconfigCostModel(),
+                                 ReuseHistory(), 1.0) == "A"
+
+    def test_region_file_accepts_policy_instance(self):
+        pol = OracleResidency(["A", "B", "C", "A"])
+        rf = RegionFile(n_lanes=1, slots=2, policy=pol,
+                        cost=PinnedReconfigCost({}, default_s=1e-3))
+        assert rf.policy_name == "oracle"
+        rf.place(0, "A", 0.0)
+        rf.place(0, "B", 1.0)
+        cost_s, events = rf.place(0, "C", 2.0)   # full: Belady evicts B
+        assert cost_s == 1e-3
+        assert [(e.op, e.key) for e in events] == [("evict", "B"),
+                                                   ("load", "C")]
+        assert rf.resident(0, "A") and not rf.resident(0, "B")
